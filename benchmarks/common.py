@@ -1,0 +1,65 @@
+"""Shared benchmark scaffolding.
+
+All data-plane benchmarks run against the simulated cloud-object-store latency
+model with sleeps compressed by ``TIME_SCALE`` (relative dynamics — the paper's
+actual claims — are preserved; absolute numbers are container-scale). Derived
+throughputs are reported in *model time* (wall / TIME_SCALE) so they are
+directly comparable to object-store-class numbers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core import (LatencyModel, MemoryObjectStore, Namespace,
+                        SystemClock)
+from repro.data.mq import BrokerConfig, KafkaSimBroker
+
+TIME_SCALE = 1.0  # real time: modeled latencies dominate real CPU overheads
+
+
+def bench_clock() -> SystemClock:
+    return SystemClock(sleep_scale=TIME_SCALE)
+
+
+def bench_latency() -> LatencyModel:
+    return LatencyModel()  # defaults model an S3-class store
+
+
+def bench_store(clock=None) -> MemoryObjectStore:
+    return MemoryObjectStore(latency=bench_latency(),
+                             clock=clock or bench_clock())
+
+
+def bench_broker(clock=None, **kw) -> KafkaSimBroker:
+    return KafkaSimBroker(BrokerConfig(**kw), clock=clock or bench_clock())
+
+
+def percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
+    return xs[i]
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def run_threads(fns: List[Callable[[], None]], timeout: float = 300.0):
+    threads = [threading.Thread(target=f, daemon=True) for f in fns]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=max(0.1, timeout - (time.monotonic() - t0)))
+    return time.monotonic() - t0

@@ -1,0 +1,97 @@
+"""Fig. 10 — consumer efficiency: per-rank throughput, P50/P95 read latency,
+read amplification, across world size x payload: BatchWeave range reads vs
+dense-read vs Kafka record fetch. All strategies read identical
+pre-materialized committed datasets (paper methodology)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import (Row, bench_broker, bench_clock, bench_store,
+                               percentile, run_threads)
+from repro.core import (Consumer, ManifestStore, MeshPosition, Namespace,
+                        Producer)
+from repro.core.tgb import build_uniform_tgb
+from repro.data.mq import KafkaTGBConsumer, KafkaTGBProducer
+
+N_TGBS = 12
+
+
+def _materialize(clock, world: int, payload: int):
+    store = bench_store(clock)
+    ns = Namespace(store, "runs/fig10")
+    p = Producer(ns, "p0", dp=world, cp=1, manifests=ManifestStore(ns))
+    for _ in range(N_TGBS):
+        p.write_tgb(uniform_slice_bytes=payload)
+        p.maybe_commit(force=True)
+    p.finalize()
+    return ns
+
+
+def _consume(ns, world: int, dense: bool, clock) -> dict:
+    lats, mbps, amps = [], [], []
+
+    def rank(d):
+        c = Consumer(ns, MeshPosition(d, 0, world, 1), dense_read=dense)
+        t0 = clock.now()
+        for _ in range(N_TGBS):
+            c.next_batch(timeout_s=120)
+        dt = clock.now() - t0
+        lats.extend(c.stats.read_latencies)
+        mbps.append(c.stats.bytes_consumed / dt / 1e6)
+        amps.append(c.stats.read_amplification)
+
+    run_threads([lambda d=d: rank(d) for d in range(world)])
+    return {"MBps_per_rank": sum(mbps) / len(mbps),
+            "p50_ms": percentile(lats, 50) * 1e3,
+            "p95_ms": percentile(lats, 95) * 1e3,
+            "amp": sum(amps) / len(amps)}
+
+
+def _consume_kafka(world: int, payload: int, clock) -> dict:
+    broker = bench_broker(clock, max_message_bytes=world * payload + 10**6)
+    kp = KafkaTGBProducer(broker)
+    for i in range(N_TGBS):
+        kp.publish_tgb(build_uniform_tgb(f"t{i}", world, 1, "p", i, payload))
+    lats, mbps, amps = [], [], []
+
+    def rank(d):
+        c = KafkaTGBConsumer(broker, d, 0, world, 1)
+        t0 = clock.now()
+        for _ in range(N_TGBS):
+            c.next_batch(timeout_s=120)
+        dt = clock.now() - t0
+        lats.extend(c.read_latencies)
+        mbps.append(c.bytes_consumed / dt / 1e6)
+        amps.append(c.read_amplification)
+
+    run_threads([lambda d=d: rank(d) for d in range(world)])
+    return {"MBps_per_rank": sum(mbps) / len(mbps),
+            "p50_ms": percentile(lats, 50) * 1e3,
+            "p95_ms": percentile(lats, 95) * 1e3,
+            "amp": sum(amps) / len(amps)}
+
+
+def run(quick: bool = True) -> List[Row]:
+    worlds = [4, 16] if quick else [8, 32, 128]
+    payloads = [100_000, 1_000_000] if quick else [100_000, 1_000_000,
+                                                   10_000_000]
+    out = []
+    for world in worlds:
+        for payload in payloads:
+            clock = bench_clock()
+            ns = _materialize(clock, world, payload)
+            t0 = time.monotonic()
+            bw = _consume(ns, world, dense=False, clock=clock)
+            dn = _consume(ns, world, dense=True, clock=clock)
+            kf = _consume_kafka(world, payload, clock)
+            wall = time.monotonic() - t0
+            for name, r in (("batchweave", bw), ("dense_read", dn),
+                            ("kafka", kf)):
+                out.append(Row(
+                    f"fig10/consumer/w{world}/payload{payload // 1000}KB/{name}",
+                    wall * 1e6 / (3 * world * N_TGBS),
+                    f"MBps_per_rank={r['MBps_per_rank']:.2f};"
+                    f"p50_ms={r['p50_ms']:.1f};p95_ms={r['p95_ms']:.1f};"
+                    f"amp={r['amp']:.2f}x"))
+    return out

@@ -1,0 +1,26 @@
+"""Fig. 1 — training-time preprocessing expansion ratios (config-dependent)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row
+from repro.data.sources import expansion_table
+
+
+def run(quick: bool = True) -> List[Row]:
+    n = 16 if quick else 128
+    t0 = time.monotonic()
+    rows = expansion_table(kinds=("video", "image_text"),
+                           resolutions=(128, 224, 448, 640),
+                           histories=(1, 4), n=n)
+    elapsed = time.monotonic() - t0
+    out = []
+    for r in rows:
+        name = (f"fig1/expansion/{r['kind']}/res{r['resolution']}"
+                f"/hist{r['history']}")
+        derived = (f"expansion_min={r['expansion_min']:.1f}x;"
+                   f"max={r['expansion_max']:.1f}x;"
+                   f"mean={r['expansion_mean']:.1f}x")
+        out.append(Row(name, elapsed / len(rows) * 1e6, derived))
+    return out

@@ -1,0 +1,176 @@
+"""Fig. 5 — end-to-end training throughput + per-step latency:
+BatchWeave vs colocated 'Local' vs strict-TGB Kafka.
+
+A GR00T-like workload: heavy per-sample preprocessing (modeled CPU seconds),
+trainer consuming one global batch per step with a modeled accelerator step.
+The three data planes differ exactly as in the paper:
+
+  * Local       — preprocessing threads share the trainer node (contention
+                  model + no failure isolation),
+  * Kafka       — strict one-message-per-TGB through a centralized broker,
+  * BatchWeave  — dedicated producers -> object store -> per-rank range reads.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+from benchmarks.common import (Row, TIME_SCALE, bench_broker, bench_clock,
+                               bench_store, percentile, run_threads)
+from repro.core import (Consumer, ManifestStore, MeshPosition, Namespace,
+                        Producer)
+from repro.core.dac import DACConfig, DACPolicy
+from repro.core.tgb import build_uniform_tgb
+from repro.data.colocated import ColocatedConfig, ColocatedPipeline
+from repro.data.mq import KafkaTGBConsumer, KafkaTGBProducer, RequestTimeout
+
+# GR00T-flavoured workload, calibrated to the paper's regime: preprocessing is
+# CPU-bound (expansion-heavy), so the colocated node's 12 contended workers
+# cannot keep the trainer fed, while dedicated 64-core producer nodes can.
+SLICE_BYTES = 4_000_000   # expanded, training-ready bytes per rank slice
+DP = 8
+N_STEPS = 20
+N_PRODUCERS = 4           # dedicated 64-core producer nodes
+ITEM_CPU_S = 0.7          # preprocessing core-seconds per rank-slice item
+PRODUCE_COST_S = ITEM_CPU_S * DP / 64   # per-TGB time on a dedicated node
+GPU_STEP_S = 0.17         # modeled accelerator step (paper BW P50 ~172 ms)
+
+
+def _batchweave() -> dict:
+    clock = bench_clock()
+    store = bench_store(clock)
+    ns = Namespace(store, "runs/fig5")
+    stop = threading.Event()
+
+    def producer_loop(pid):
+        p = Producer(ns, f"p{pid}", dp=DP, cp=1,
+                     manifests=ManifestStore(ns),
+                     policy=DACPolicy(DACConfig(eps=0.20)))
+        while not stop.is_set():
+            clock.sleep(PRODUCE_COST_S)
+            p.write_tgb(uniform_slice_bytes=SLICE_BYTES)
+            p.maybe_commit()
+        try:
+            p.finalize(max_attempts=50)
+        except RuntimeError:
+            pass
+
+    producers = [threading.Thread(target=producer_loop, args=(i,), daemon=True)
+                 for i in range(N_PRODUCERS)]
+    for t in producers:
+        t.start()
+
+    consumers = [Consumer(ns, MeshPosition(d, 0, DP, 1), prefetch_depth=4)
+                 for d in range(DP)]
+    # warm-up: producers accumulate a small backlog before step timing starts
+    # (paper methodology: reported timing begins at first-batch arrival and
+    # excludes initial producer warm-up)
+    while consumers[0].view.total_steps < 8:
+        consumers[0].poll()
+        clock.sleep(0.02)
+    for c in consumers:
+        c.start_prefetch()
+    lat = []
+    t_start = clock.now()
+    for s in range(N_STEPS):
+        t0 = clock.now()
+        for c in consumers:  # all-rank barrier per step
+            c.next_batch(timeout_s=600)
+        clock.sleep(GPU_STEP_S)
+        lat.append(clock.now() - t0)
+    total = clock.now() - t_start
+    stop.set()
+    for c in consumers:
+        c.stop_prefetch()
+    return {"steps_per_s": N_STEPS / total,
+            "p50_ms": percentile(lat, 50) * 1e3,
+            "p95_ms": percentile(lat, 95) * 1e3}
+
+
+def _local() -> dict:
+    clock = bench_clock()
+    # preprocessing on the trainer node: 12 workers/rank-node, contended with
+    # 8 trainer ranks for the node's 64 cores (paper's expert-tuned config)
+    pipe = ColocatedPipeline(
+        ColocatedConfig(workers=12, queue_depth=8, node_cpu=64,
+                        train_cpu=16, trainer_ranks_per_node=8),
+        preprocess_cost_s=lambda i: ITEM_CPU_S,
+        batch_cpu_items=DP, clock=clock)
+    pipe.start()
+    clock.sleep(1.0)  # same warm-up treatment: let the bounded queue fill
+    t0 = clock.now()
+    trace = pipe.run_training(steps=N_STEPS, gpu_step_s=GPU_STEP_S)
+    total = clock.now() - t0
+    pipe.stop()
+    return {"steps_per_s": len(trace.latencies) / total,
+            "p50_ms": trace.percentile(50) * 1e3,
+            "p95_ms": trace.percentile(95) * 1e3}
+
+
+def _kafka() -> dict:
+    clock = bench_clock()
+    broker = bench_broker(clock, max_message_bytes=16 * SLICE_BYTES,
+                          broker_ingest_Bps=400e6, broker_fetch_Bps=500e6,
+                          request_timeout_s=20.0)
+    stop = threading.Event()
+
+    def producer_loop(pid):
+        kp = KafkaTGBProducer(broker)
+        seq = 0
+        while not stop.is_set():
+            clock.sleep(PRODUCE_COST_S)
+            blob = build_uniform_tgb(f"{pid}-{seq}", DP, 1, f"p{pid}", seq,
+                                     SLICE_BYTES)
+            kp.publish_tgb(blob)
+            seq += 1
+
+    producers = [threading.Thread(target=producer_loop, args=(i,), daemon=True)
+                 for i in range(N_PRODUCERS)]
+    for t in producers:
+        t.start()
+    consumers = [KafkaTGBConsumer(broker, d, 0, DP, 1) for d in range(DP)]
+    while broker.end_offset() < 8:   # same warm-up treatment
+        clock.sleep(0.02)
+    lat = []
+    t_start = clock.now()
+    steps_done = 0
+    for s in range(N_STEPS):
+        t0 = clock.now()
+        try:
+            for c in consumers:
+                c.next_batch(timeout_s=120)
+        except RequestTimeout:
+            break
+        clock.sleep(GPU_STEP_S)
+        lat.append(clock.now() - t0)
+        steps_done += 1
+    total = clock.now() - t_start
+    stop.set()
+    return {"steps_per_s": steps_done / max(total, 1e-9),
+            "p50_ms": percentile(lat, 50) * 1e3,
+            "p95_ms": percentile(lat, 95) * 1e3}
+
+
+def run(quick: bool = True) -> List[Row]:
+    out = []
+    results = {}
+    for name, fn in (("batchweave", _batchweave), ("local", _local),
+                     ("kafka", _kafka)):
+        t0 = time.monotonic()
+        r = fn()
+        wall = time.monotonic() - t0
+        results[name] = r
+        out.append(Row(
+            f"fig5/e2e/{name}", wall * 1e6 / N_STEPS,
+            f"steps_per_s={r['steps_per_s']:.3f};p50_ms={r['p50_ms']:.0f};"
+            f"p95_ms={r['p95_ms']:.0f}"))
+    bw, lc = results["batchweave"], results["local"]
+    if lc["steps_per_s"] > 0:
+        out.append(Row("fig5/e2e/speedup_vs_local", 0.0,
+                       f"x={bw['steps_per_s'] / lc['steps_per_s']:.2f}"))
+    kf = results["kafka"]
+    if kf["steps_per_s"] > 0:
+        out.append(Row("fig5/e2e/speedup_vs_kafka", 0.0,
+                       f"x={bw['steps_per_s'] / kf['steps_per_s']:.2f}"))
+    return out

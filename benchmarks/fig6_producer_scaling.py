@@ -1,0 +1,76 @@
+"""Fig. 6 — producer ingestion throughput vs producer count x payload size:
+BatchWeave (DAC) vs strict-TGB Kafka. BatchWeave writes scale with the
+producer pool (decentralized object puts); the Kafka leader serializes."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+from benchmarks.common import (Row, TIME_SCALE, bench_broker, bench_clock,
+                               bench_store, run_threads)
+from repro.core import ManifestStore, Namespace, Producer
+from repro.core.dac import DACConfig, DACPolicy
+from repro.core.tgb import build_uniform_tgb
+from repro.data.mq import KafkaTGBProducer
+
+DURATION_MODEL_S = 6.0    # per (system, producers, payload) measurement window
+
+
+def _bw_throughput(n_producers: int, payload: int) -> float:
+    clock = bench_clock()
+    store = bench_store(clock)
+    ns = Namespace(store, "runs/fig6")
+    stop = threading.Event()
+    sent_bytes = [0] * n_producers
+
+    def loop(i):
+        p = Producer(ns, f"p{i}", dp=1, cp=1, manifests=ManifestStore(ns),
+                     policy=DACPolicy(DACConfig(eps=0.05, seed=i)))
+        t0 = clock.now()
+        while clock.now() - t0 < DURATION_MODEL_S:
+            p.write_tgb(uniform_slice_bytes=payload)
+            sent_bytes[i] += payload
+            p.maybe_commit()
+
+    run_threads([lambda i=i: loop(i) for i in range(n_producers)])
+    return sum(sent_bytes) / DURATION_MODEL_S
+
+
+def _kafka_throughput(n_producers: int, payload: int) -> float:
+    clock = bench_clock()
+    broker = bench_broker(clock, max_message_bytes=4 * payload + 1_000_000,
+                          request_timeout_s=10.0)
+    sent_bytes = [0] * n_producers
+
+    def loop(i):
+        kp = KafkaTGBProducer(broker)
+        seq = 0
+        t0 = clock.now()
+        while clock.now() - t0 < DURATION_MODEL_S:
+            blob = build_uniform_tgb(f"{i}-{seq}", 1, 1, f"p{i}", seq, payload)
+            if kp.publish_tgb(blob) is not None:
+                sent_bytes[i] += payload
+            seq += 1
+
+    run_threads([lambda i=i: loop(i) for i in range(n_producers)])
+    return sum(sent_bytes) / DURATION_MODEL_S
+
+
+def run(quick: bool = True) -> List[Row]:
+    producer_counts = [2, 8] if quick else [2, 4, 8, 16, 32]
+    payloads = [100_000, 1_000_000] if quick else [100_000, 1_000_000,
+                                                   10_000_000]
+    out = []
+    for payload in payloads:
+        for n in producer_counts:
+            t0 = time.monotonic()
+            bw = _bw_throughput(n, payload)
+            kf = _kafka_throughput(n, payload)
+            wall = time.monotonic() - t0
+            out.append(Row(
+                f"fig6/producer/p{n}/payload{payload // 1000}KB",
+                wall * 1e6,
+                f"batchweave_MBps={bw / 1e6:.1f};kafka_MBps={kf / 1e6:.1f};"
+                f"ratio={bw / max(kf, 1):.2f}"))
+    return out

@@ -1,0 +1,87 @@
+"""Fig. 8 — overhead of exactly-once producer state persistence.
+
+Paired appends: every TGB is committed immediately (stressing per-commit
+metadata), alternating real producer-state metadata (a 128-producer fleet's
+state map, updated in lockstep) with a dummy-metadata control (same TGB list,
+no state map). Jitter is disabled so the delta is the metadata cost itself.
+Reported: mean commit-latency delta %, and its decline from run start to run
+end as the TGB list grows (the paper's 'fixed cost amortizes' claim)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, bench_clock
+from repro.core import LatencyModel, MemoryObjectStore, Namespace
+from repro.core.manifest import (DatasetView, ProducerState,
+                                 encode_flat_manifest)
+from repro.core.tgb import TGBDescriptor
+
+N_COMMITS = 60
+FLEET = 128  # producers whose durable state the manifest carries
+
+
+def _zero_jitter_store(clock):
+    lat = LatencyModel(jitter_frac=0.0)
+    return MemoryObjectStore(latency=lat, clock=clock)
+
+
+def _measure(ns, payload: int, tgbs_per_commit: int, with_state: bool,
+             tag: str) -> List[float]:
+    clock = ns.store.clock
+    view = DatasetView()
+    if with_state:
+        view.producers = {f"{tag}-{i}": ProducerState(0, 0)
+                          for i in range(FLEET)}
+    lat = []
+    for c in range(N_COMMITS):
+        descs = [TGBDescriptor(f"{tag}-{c}-{i}", f"{tag}/{c}/{i}", payload,
+                               1, 1, 1, 128, tag, c * tgbs_per_commit + i)
+                 for i in range(tgbs_per_commit)]
+        producers = dict(view.producers)
+        if with_state:
+            # lockstep update of this committer's durable offset
+            producers[f"{tag}-0"] = ProducerState(
+                committed_offset=(c + 1) * tgbs_per_commit - 1,
+                last_commit_version=view.version + 1)
+        t0 = clock.now()
+        new_view = DatasetView(version=view.version + 1,
+                               base_step=view.base_step,
+                               tgbs=view.tgbs + descs, producers=producers)
+        raw = encode_flat_manifest(new_view)
+        ok = ns.store.put_if_absent(
+            ns.key("bench8", tag, f"{new_view.version:08d}.manifest"), raw)
+        lat.append(clock.now() - t0)
+        assert ok
+        view = new_view
+    return lat
+
+
+def run(quick: bool = True) -> List[Row]:
+    payloads = [100_000, 1_000_000] if quick else [100_000, 1_000_000,
+                                                   10_000_000]
+    tgb_counts = [8, 32] if quick else [8, 32, 128]
+    out = []
+    for payload in payloads:
+        for n_tgb in tgb_counts:
+            clock = bench_clock()
+            ns = Namespace(_zero_jitter_store(clock),
+                           f"runs/fig8-{payload}-{n_tgb}")
+            t0 = time.monotonic()
+            ls = _measure(ns, payload, n_tgb, True, "state")
+            lc = _measure(ns, payload, n_tgb, False, "dummy")
+            wall = time.monotonic() - t0
+            mean_s, mean_c = sum(ls) / len(ls), sum(lc) / len(lc)
+            delta = (mean_s - mean_c) / max(mean_c, 1e-12) * 100
+            # decline over the run: first vs last quartile
+            q = N_COMMITS // 4
+            d_start = (sum(ls[:q]) - sum(lc[:q])) / max(sum(lc[:q]), 1e-12) * 100
+            d_end = (sum(ls[-q:]) - sum(lc[-q:])) / max(sum(lc[-q:]), 1e-12) * 100
+            out.append(Row(
+                f"fig8/exactly_once/payload{payload // 1000}KB/tgb{n_tgb}",
+                wall * 1e6 / (2 * N_COMMITS),
+                f"commit_ms_state={mean_s * 1e3:.3f};"
+                f"commit_ms_control={mean_c * 1e3:.3f};"
+                f"delta_pct={delta:.1f};start_pct={d_start:.1f};"
+                f"end_pct={d_end:.1f}"))
+    return out

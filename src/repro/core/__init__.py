@@ -1,0 +1,45 @@
+"""BatchWeave core: object-store-native training data plane.
+
+Public surface:
+
+  ObjectStore backends   — MemoryObjectStore, FileObjectStore, LatencyModel
+  TGB data plane         — TGBBuilder, TGBReader, TGBDescriptor
+  Manifest control plane — ManifestStore, DatasetView, ProducerState
+  Commit protocol        — CommitProtocol
+  Commit policies        — DACPolicy (paper Alg. 1), Naive/Fixed/Incr/AIMD
+  Clients                — Producer, Consumer, MeshPosition
+  Lifecycle              — Watermark, Reclaimer, write_watermark, global_watermark
+"""
+from repro.core.clock import Clock, SystemClock, VirtualClock
+from repro.core.commit import CommitProtocol, CommitResult
+from repro.core.consumer import Consumer, ConsumerStats, MeshPosition, remap_step
+from repro.core.dac import (AIMDPolicy, CommitPolicy, DACConfig, DACPolicy,
+                            FixedCountPolicy, IncrPolicy, NaivePolicy,
+                            make_policy)
+from repro.core.lifecycle import (Reclaimer, Watermark, global_watermark,
+                                  read_watermarks, write_watermark)
+from repro.core.manifest import (DatasetView, ManifestStore, ProducerState,
+                                 MANIFEST_FORMAT_DELTA, MANIFEST_FORMAT_FLAT)
+from repro.core.objectstore import (ConditionalPutFailed, FaultInjector,
+                                    FileObjectStore, InjectedCrash,
+                                    LatencyModel, MemoryObjectStore, Namespace,
+                                    NoSuchKey, ObjectStore, ZERO_LATENCY)
+from repro.core.producer import Producer, ProducerStats, run_producer_loop
+from repro.core.tgb import TGBBuilder, TGBDescriptor, TGBFooter, TGBReader
+
+__all__ = [
+    "Clock", "SystemClock", "VirtualClock",
+    "CommitProtocol", "CommitResult",
+    "Consumer", "ConsumerStats", "MeshPosition", "remap_step",
+    "AIMDPolicy", "CommitPolicy", "DACConfig", "DACPolicy", "FixedCountPolicy",
+    "IncrPolicy", "NaivePolicy", "make_policy",
+    "Reclaimer", "Watermark", "global_watermark", "read_watermarks",
+    "write_watermark",
+    "DatasetView", "ManifestStore", "ProducerState",
+    "MANIFEST_FORMAT_DELTA", "MANIFEST_FORMAT_FLAT",
+    "ConditionalPutFailed", "FaultInjector", "FileObjectStore", "InjectedCrash",
+    "LatencyModel", "MemoryObjectStore", "Namespace", "NoSuchKey", "ObjectStore",
+    "ZERO_LATENCY",
+    "Producer", "ProducerStats", "run_producer_loop",
+    "TGBBuilder", "TGBDescriptor", "TGBFooter", "TGBReader",
+]

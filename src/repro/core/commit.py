@@ -1,0 +1,105 @@
+"""Commit & rebase protocol (paper §5.1).
+
+A producer commits by (1) starting from its current local view ``M_v``,
+(2) constructing candidate ``M_{v+1}`` appending its local TGB references plus
+updated producer metadata, (3) attempting a conditional put on
+``(v+1).manifest``. On conflict it fetches the winner, **rebases** (append-only
+union merge, deduplicating its own already-committed TGBs via the persisted
+producer state map — the exactly-once invariant), and retries later (cadence is
+the commit policy's job, not this module's).
+
+Version numbers are strictly monotone and never reused: no ABA hazard.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.manifest import (DatasetView, ManifestStore, ProducerState)
+from repro.core.tgb import TGBDescriptor
+
+
+@dataclass
+class CommitResult:
+    success: bool
+    version: int            # committed version on success; latest known otherwise
+    tau_obs: float          # fragile-window observation (read->write-attempt time)
+    n_producers: int        # producer-pool size read from committed state
+    committed_tgbs: int = 0
+    manifest_bytes: int = 0
+
+
+class CommitProtocol:
+    """Stateful commit client for one producer."""
+
+    def __init__(self, manifests: ManifestStore, producer_id: str, epoch: int = 0):
+        self.manifests = manifests
+        self.producer_id = producer_id
+        self.epoch = epoch
+        self.view: DatasetView = DatasetView()
+        self.clock = manifests.store.clock
+
+    # ------------------------------------------------------------------
+    def refresh(self) -> DatasetView:
+        """Catch up the local view to the latest committed manifest."""
+        latest = self.manifests.latest_version(hint=self.view.version)
+        if latest > self.view.version:
+            self.view = self.manifests.load_view(latest, base=self.view)
+        return self.view
+
+    def _dedup_pending(self, pending: List[TGBDescriptor]) -> List[TGBDescriptor]:
+        """Drop pending TGBs already visible in the committed view (their
+        producer_seq <= our committed offset). This is what makes rebase
+        exactly-once: a TGB that made it into a winner manifest is never
+        appended twice."""
+        committed = self.view.producer_offset(self.producer_id)
+        return [t for t in pending if t.producer_seq > committed]
+
+    def try_commit(self, pending: List[TGBDescriptor],
+                   trim_to_step: Optional[int] = None) -> Tuple[CommitResult, List[TGBDescriptor]]:
+        """One commit attempt, per Algorithm 1: READ the current manifest
+        version, construct the candidate, submit via conditional put.
+
+        Returns (result, still_pending). The fragile window tau spans from the
+        version read through completion of the conditional write (Alg. 1
+        l.6-8) — the read-at-attempt-start matters: attempting from a stale
+        cached view after a DAC gap would conflict almost surely regardless of
+        cadence (the paper notes staleness only costs extra failed writes;
+        the ALGORITHM reads first)."""
+        t0 = self.clock.now()
+        self.refresh()
+        pending = self._dedup_pending(pending)
+        if not pending:
+            # nothing to publish; treat as trivially successful with zero I/O
+            return (CommitResult(True, self.view.version, 0.0,
+                                 max(1, len(self.view.producers))), [])
+        new_offset = max(t.producer_seq for t in pending)
+        producers = dict(self.view.producers)
+        producers[self.producer_id] = ProducerState(
+            committed_offset=new_offset,
+            last_commit_version=self.view.version + 1,
+            epoch=self.epoch)
+        version, raw = self.manifests.encode_candidate(
+            self.view, pending, producers, trim_to_step=trim_to_step)
+        ok = self.manifests.try_put_version(version, raw)
+        tau = self.clock.now() - t0
+        if ok:
+            # our candidate is now the authoritative state: update local view
+            self.view = self.manifests.load_view(version, base=self.view)
+            return (CommitResult(True, version, tau, max(1, len(self.view.producers)),
+                                 committed_tgbs=len(pending),
+                                 manifest_bytes=len(raw)), [])
+        # conflict: rebase onto the winner(s)
+        self.refresh()
+        still = self._dedup_pending(pending)
+        return (CommitResult(False, self.view.version, tau,
+                             max(1, len(self.view.producers)),
+                             manifest_bytes=len(raw)), still)
+
+    # ------------------------------------------------------------------
+    def recover_offset(self) -> int:
+        """Producer restart: read the durable resumption state for our
+        producer_id from the latest manifest (paper §5.3)."""
+        self.refresh()
+        return self.view.producer_offset(self.producer_id)

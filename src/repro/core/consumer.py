@@ -1,0 +1,283 @@
+"""Consumer client (paper §3.1 stage 3, §4.4).
+
+Embedded in each training rank. Maintains a cursor ``<V, S>`` (manifest version
+being read, global step index), derives its ``(d, c)`` coordinates locally from
+its mesh position, reads the footer index once per TGB (cached), and issues one
+targeted range read per step. No inter-rank communication.
+
+Also implements:
+  * asynchronous prefetch of upcoming slices (hides object-store read latency),
+  * topology remap (§4.1): TP/PP changes are transparent; DP/CP world-size
+    changes by an integer factor remap (logical step, rank) -> (tgb step, slice)
+    locally with no data rewrite,
+  * dense-read baseline mode (fetch full TGB, slice locally) for Fig. 10,
+  * read-amplification accounting.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.manifest import DatasetView, ManifestStore
+from repro.core.objectstore import Namespace, NoSuchKey
+from repro.core.tgb import TGBFooter, TGBReader
+
+
+@dataclass
+class ConsumerStats:
+    steps_consumed: int = 0
+    bytes_consumed: int = 0     # payload actually used by this rank
+    bytes_fetched: int = 0      # payload + footer/header overhead fetched
+    footer_reads: int = 0
+    manifest_polls: int = 0
+    read_latencies: List[float] = field(default_factory=list)
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+
+    @property
+    def read_amplification(self) -> float:
+        return self.bytes_fetched / max(1, self.bytes_consumed)
+
+
+@dataclass(frozen=True)
+class MeshPosition:
+    """This rank's data-relevant coordinates. TP/PP ranks of the same (d, c)
+    group pass identical coordinates (data delivery is TP/PP-transparent)."""
+
+    dp_rank: int
+    cp_rank: int
+    dp_size: int
+    cp_size: int
+
+
+def remap_step(logical_step: int, pos: MeshPosition,
+               tgb_dp: int, tgb_cp: int) -> Tuple[int, int, int]:
+    """Map (logical step, new-topology rank) -> (tgb step index, d, c) when the
+    consuming topology differs from the TGB's materialized D x C layout by
+    integer factors (paper §4.1 'Topology reconfiguration').
+
+    * DP doubled (pos.dp_size = k * tgb_dp): k consecutive TGBs form one logical
+      step; replica d reads TGB ``logical_step * k + d // tgb_dp``, slice
+      ``d % tgb_dp``.
+    * DP halved (tgb_dp = k * pos.dp_size): one TGB serves k logical steps; step
+      ``s`` uses slice block ``(s % k) * pos.dp_size + d`` of TGB ``s // k``.
+    * CP follows the same logic along the token-chunk dimension.
+    """
+    d, c = pos.dp_rank, pos.cp_rank
+    step = logical_step
+    # --- DP dimension ---
+    if pos.dp_size == tgb_dp:
+        td = d
+    elif pos.dp_size > tgb_dp:
+        if pos.dp_size % tgb_dp:
+            raise ValueError(f"DP {pos.dp_size} not an integer multiple of TGB dp {tgb_dp}")
+        k = pos.dp_size // tgb_dp
+        step = step * k + d // tgb_dp
+        td = d % tgb_dp
+    else:
+        if tgb_dp % pos.dp_size:
+            raise ValueError(f"TGB dp {tgb_dp} not an integer multiple of DP {pos.dp_size}")
+        k = tgb_dp // pos.dp_size
+        td = (step % k) * pos.dp_size + d
+        step = step // k
+    # --- CP dimension (within the chosen TGB) ---
+    if pos.cp_size == tgb_cp:
+        tc = c
+    elif pos.cp_size > tgb_cp:
+        raise ValueError("CP growth requires sub-slice reads; materialize TGBs "
+                         "with the max CP degree instead")
+    else:
+        if tgb_cp % pos.cp_size:
+            raise ValueError(f"TGB cp {tgb_cp} not an integer multiple of CP {pos.cp_size}")
+        # CP shrink: each consumer rank owns tgb_cp/cp_size consecutive chunks;
+        # callers read them all (concatenated) for its longer token span.
+        tc = c * (tgb_cp // pos.cp_size)
+    return step, td, tc
+
+
+class Consumer:
+    """One training rank's BatchWeave consumer client."""
+
+    def __init__(self, ns: Namespace, pos: MeshPosition,
+                 manifests: Optional[ManifestStore] = None,
+                 prefetch_depth: int = 4,
+                 dense_read: bool = False,
+                 verify_crc: bool = True):
+        self.ns = ns
+        self.store = ns.store
+        self.clock = self.store.clock
+        self.pos = pos
+        self.manifests = manifests or ManifestStore(ns)
+        self.view: DatasetView = DatasetView()
+        self.step = 0  # next global step S to consume
+        self.dense_read = dense_read
+        self.verify_crc = verify_crc
+        self.stats = ConsumerStats()
+        self._footers: Dict[str, Tuple[TGBFooter, int]] = {}  # key -> (footer, size)
+        self._footer_lock = threading.Lock()
+        self.prefetch_depth = prefetch_depth
+        self._prefetched: Dict[Tuple[int, int, int], bytes] = {}
+        self._prefetch_lock = threading.Lock()
+        self._prefetch_thread: Optional[threading.Thread] = None
+        self._prefetch_stop = threading.Event()
+
+    # -- cursor ---------------------------------------------------------------
+    @property
+    def cursor(self) -> Tuple[int, int]:
+        """(V, S): manifest version being read + next global step index."""
+        return (self.view.version, self.step)
+
+    def restore_cursor(self, version: int, step: int) -> None:
+        """Rollback/recovery: resume from a checkpointed cursor (§5.3). The
+        watermark retention policy guarantees `version` is still readable."""
+        self.view = self.manifests.load_view(version)
+        self.step = step
+        with self._prefetch_lock:
+            self._prefetched.clear()
+
+    # -- manifest polling -------------------------------------------------------
+    def poll(self) -> bool:
+        """Probe for newer manifest versions; returns True if view advanced."""
+        self.stats.manifest_polls += 1
+        latest = self.manifests.latest_version(hint=self.view.version)
+        if latest > self.view.version:
+            self.view = self.manifests.load_view(latest, base=self.view)
+            return True
+        return False
+
+    def _wait_for_step(self, step: int, timeout_s: Optional[float]) -> None:
+        t0 = self.clock.now()
+        poll_gap = 0.01
+        while self.view.total_steps <= step:
+            if not self.poll():
+                if timeout_s is not None and self.clock.now() - t0 > timeout_s:
+                    raise TimeoutError(
+                        f"step {step} not published after {timeout_s}s "
+                        f"(total={self.view.total_steps})")
+                self.clock.sleep(poll_gap)
+                poll_gap = min(poll_gap * 1.5, 0.25)
+
+    # -- footer cache ----------------------------------------------------------
+    def _reader(self, key: str, size_hint: int) -> TGBReader:
+        r = TGBReader(self.store, key, object_size=size_hint)
+        with self._footer_lock:
+            cached = self._footers.get(key)
+        if cached is not None:
+            r.set_cached_footer(*cached)
+        return r
+
+    def _cache_footer(self, key: str, reader: TGBReader) -> None:
+        footer = reader.footer()
+        with self._footer_lock:
+            if key not in self._footers:
+                self._footers[key] = (footer, reader.size)
+                self.stats.footer_reads += 1
+                # footer fetch overhead: tail (16B) + footer bytes
+                self.stats.bytes_fetched += len(footer.to_bytes()) + 16
+
+    # -- data reads --------------------------------------------------------------
+    def _fetch_slice(self, tgb_step: int, d: int, c: int) -> bytes:
+        desc = self.view.tgb_at_step(tgb_step)
+        reader = self._reader(desc.object_key, desc.size_bytes)
+        had_footer = reader._footer is not None
+        if not had_footer:
+            self._cache_footer(desc.object_key, reader)
+        if self.dense_read:
+            blob = reader.read_full()
+            self.stats.bytes_fetched += len(blob)
+            off, length, _crc = reader.footer().slice_entry(d, c)
+            return blob[off:off + length]
+        data = reader.read_slice(d, c, verify=self.verify_crc)
+        self.stats.bytes_fetched += len(data)
+        return data
+
+    def next_batch(self, timeout_s: Optional[float] = None) -> bytes:
+        """Blocking read of this rank's slice for the next global step."""
+        t0 = self.clock.now()
+        tgb_step, d, c = remap_step(self.step, self.pos,
+                                    self._tgb_dp(), self._tgb_cp())
+        self._wait_for_step(tgb_step, timeout_s)
+        key3 = (tgb_step, d, c)
+        with self._prefetch_lock:
+            data = self._prefetched.pop(key3, None)
+        if data is not None:
+            self.stats.prefetch_hits += 1
+        else:
+            self.stats.prefetch_misses += 1
+            data = self._fetch_and_concat(tgb_step, d, c)
+        self.stats.steps_consumed += 1
+        self.stats.bytes_consumed += len(data)
+        self.stats.read_latencies.append(self.clock.now() - t0)
+        self.step += 1
+        return data
+
+    def _tgb_dp(self) -> int:
+        # the materialized layout; all TGBs in a run share D x C (enforced by
+        # producers); fall back to consumer topology before first view.
+        if self.view.tgbs:
+            return self.view.tgbs[0].dp
+        return self.pos.dp_size
+
+    def _tgb_cp(self) -> int:
+        if self.view.tgbs:
+            return self.view.tgbs[0].cp
+        return self.pos.cp_size
+
+    def _fetch_and_concat(self, tgb_step: int, d: int, c: int) -> bytes:
+        """Fetch slice (d, c); if CP shrank, fetch this rank's span of chunks."""
+        tgb_cp = self._tgb_cp()
+        span = max(1, tgb_cp // self.pos.cp_size) if tgb_cp > self.pos.cp_size else 1
+        if span == 1:
+            return self._fetch_slice(tgb_step, d, c)
+        parts = [self._fetch_slice(tgb_step, d, c + i) for i in range(span)]
+        return b"".join(parts)
+
+    # -- prefetch -----------------------------------------------------------------
+    def start_prefetch(self) -> None:
+        if self._prefetch_thread is not None:
+            return
+        self._prefetch_stop.clear()
+        self._prefetch_thread = threading.Thread(
+            target=self._prefetch_loop, daemon=True,
+            name=f"bw-prefetch-d{self.pos.dp_rank}c{self.pos.cp_rank}")
+        self._prefetch_thread.start()
+
+    def stop_prefetch(self) -> None:
+        self._prefetch_stop.set()
+        if self._prefetch_thread is not None:
+            self._prefetch_thread.join(timeout=5)
+            self._prefetch_thread = None
+
+    def _prefetch_loop(self) -> None:
+        while not self._prefetch_stop.is_set():
+            fetched_any = False
+            base = self.step
+            for ahead in range(self.prefetch_depth):
+                s = base + ahead
+                try:
+                    tgb_step, d, c = remap_step(s, self.pos, self._tgb_dp(),
+                                                self._tgb_cp())
+                except ValueError:
+                    break
+                key3 = (tgb_step, d, c)
+                with self._prefetch_lock:
+                    if key3 in self._prefetched:
+                        continue
+                if self.view.total_steps <= tgb_step:
+                    self.poll()
+                    if self.view.total_steps <= tgb_step:
+                        break
+                try:
+                    data = self._fetch_and_concat(tgb_step, d, c)
+                except (KeyError, NoSuchKey):
+                    break
+                with self._prefetch_lock:
+                    self._prefetched[key3] = data
+                    # bound memory
+                    while len(self._prefetched) > self.prefetch_depth + 2:
+                        self._prefetched.pop(next(iter(self._prefetched)))
+                fetched_any = True
+            if not fetched_any:
+                self.clock.sleep(0.005)

@@ -1,0 +1,278 @@
+"""Versioned manifest: BatchWeave's logical control structure (paper §4.2).
+
+A manifest version ``M_v`` is an immutable object named by its version number
+(``00000011.manifest``) containing:
+
+  * the **TGB list** — the authoritative, globally ordered step sequence
+    (entry ``s - base_step`` identifies global batch ``B_s``),
+  * the **per-producer state map** — stream offset up to which each producer has
+    committed (exactly-once producer recovery, and DAC's dynamic N),
+  * ``base_step`` — number of logically trimmed leading TGBs (checkpoint-aligned
+    lifecycle; step indices are global and never reused).
+
+Publication is serialized by a conditional put on the next version name: this
+single atomic write advances the version and makes new TGBs visible (§4.3).
+
+Two codecs:
+
+  * ``flat``  — paper-faithful: each manifest carries the full TGB list, so
+    manifest I/O cost grows with history. This is what DAC adapts to.
+  * ``delta`` — beyond-paper: each manifest carries only the TGBs added by this
+    commit plus a pointer chain (with periodic full snapshots), making commit
+    I/O O(delta) instead of O(history). See EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+import msgpack
+
+from repro.core.objectstore import Namespace, NoSuchKey, ObjectStore
+from repro.core.tgb import TGBDescriptor
+
+MANIFEST_FORMAT_FLAT = "flat"
+MANIFEST_FORMAT_DELTA = "delta"
+
+
+@dataclass(frozen=True)
+class ProducerState:
+    """Durable per-producer resumption state (paper §5.3): the stream offset up
+    to which this producer's TGBs are visible in the committed manifest."""
+
+    committed_offset: int  # highest producer_seq committed (-1 if none)
+    last_commit_version: int
+    epoch: int = 0  # producer incarnation (bumped on takeover/restart)
+
+    def pack(self) -> list:
+        return [self.committed_offset, self.last_commit_version, self.epoch]
+
+    @staticmethod
+    def unpack(row) -> "ProducerState":
+        return ProducerState(*row)
+
+
+@dataclass
+class DatasetView:
+    """A consumer/producer's reconstructed view of the dataset at some version.
+
+    ``tgbs[i]`` corresponds to global step ``base_step + i``. ``total_steps`` is
+    ``base_step + len(tgbs)``; the authoritative step sequence is append-only.
+    """
+
+    version: int = -1
+    base_step: int = 0
+    tgbs: List[TGBDescriptor] = field(default_factory=list)
+    producers: Dict[str, ProducerState] = field(default_factory=dict)
+
+    @property
+    def total_steps(self) -> int:
+        return self.base_step + len(self.tgbs)
+
+    def tgb_at_step(self, step: int) -> TGBDescriptor:
+        idx = step - self.base_step
+        if idx < 0:
+            raise KeyError(f"step {step} was trimmed (base_step={self.base_step})")
+        if idx >= len(self.tgbs):
+            raise KeyError(f"step {step} not yet published (total={self.total_steps})")
+        return self.tgbs[idx]
+
+    def producer_offset(self, producer_id: str) -> int:
+        st = self.producers.get(producer_id)
+        return st.committed_offset if st is not None else -1
+
+    def copy(self) -> "DatasetView":
+        return DatasetView(self.version, self.base_step, list(self.tgbs),
+                           dict(self.producers))
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+def _pack_producers(producers: Dict[str, ProducerState]) -> dict:
+    return {pid: st.pack() for pid, st in producers.items()}
+
+
+def _unpack_producers(raw: dict) -> Dict[str, ProducerState]:
+    return {pid: ProducerState.unpack(row) for pid, row in raw.items()}
+
+
+def encode_flat_manifest(view: DatasetView) -> bytes:
+    """Flat manifest: the complete dataset state (paper-faithful)."""
+    return msgpack.packb({
+        "format": MANIFEST_FORMAT_FLAT,
+        "version": view.version,
+        "base_step": view.base_step,
+        "tgbs": [t.pack() for t in view.tgbs],
+        "producers": _pack_producers(view.producers),
+    }, use_bin_type=True)
+
+
+def decode_manifest(raw: bytes) -> dict:
+    return msgpack.unpackb(raw, raw=False, strict_map_key=False)
+
+
+def encode_delta_manifest(version: int, parent_version: int,
+                          new_tgbs: List[TGBDescriptor],
+                          producers: Dict[str, ProducerState],
+                          base_step: int,
+                          snapshot_view: Optional[DatasetView] = None) -> bytes:
+    """Delta manifest: only this commit's TGBs + full (small) producer map.
+
+    If ``snapshot_view`` is given, the full TGB list is embedded (periodic
+    snapshot so that cold readers bound their chain walk).
+    """
+    doc = {
+        "format": MANIFEST_FORMAT_DELTA,
+        "version": version,
+        "parent_version": parent_version,
+        "base_step": base_step,
+        "delta_tgbs": [t.pack() for t in new_tgbs],
+        "producers": _pack_producers(producers),
+    }
+    if snapshot_view is not None:
+        doc["snapshot_tgbs"] = [t.pack() for t in snapshot_view.tgbs]
+        doc["snapshot_base_step"] = snapshot_view.base_step
+    return msgpack.packb(doc, use_bin_type=True)
+
+
+class ManifestStore:
+    """Version-sequence access on top of the object store.
+
+    Readers follow progress by probing for higher-numbered manifest objects
+    (paper §4.2); a LIST fallback handles cold start and large jumps.
+    """
+
+    def __init__(self, ns: Namespace, fmt: str = MANIFEST_FORMAT_FLAT,
+                 snapshot_every: int = 64):
+        self.ns = ns
+        self.store: ObjectStore = ns.store
+        self.format = fmt
+        self.snapshot_every = snapshot_every
+        self._cache_lock = threading.Lock()
+        self._raw_cache: Dict[int, dict] = {}  # decoded manifest docs (immutable)
+        self._raw_cache_order: List[int] = []
+        self._raw_cache_cap = 256
+
+    # -- raw access ---------------------------------------------------------
+    def read_doc(self, version: int) -> dict:
+        with self._cache_lock:
+            doc = self._raw_cache.get(version)
+        if doc is not None:
+            return doc
+        raw = self.store.get(self.ns.manifest_key(version))
+        doc = decode_manifest(raw)
+        with self._cache_lock:
+            if version not in self._raw_cache:
+                self._raw_cache[version] = doc
+                self._raw_cache_order.append(version)
+                while len(self._raw_cache_order) > self._raw_cache_cap:
+                    old = self._raw_cache_order.pop(0)
+                    self._raw_cache.pop(old, None)
+        return doc
+
+    def try_put_version(self, version: int, raw: bytes) -> bool:
+        return self.store.put_if_absent(self.ns.manifest_key(version), raw)
+
+    def version_exists(self, version: int) -> bool:
+        return self.store.exists(self.ns.manifest_key(version))
+
+    def latest_version(self, hint: int = -1) -> int:
+        """Find the highest committed version. Probes forward from ``hint``;
+        falls back to LIST when cold (hint < 0)."""
+        if hint < 0:
+            keys = self.store.list(self.ns.key("manifest"))
+            if not keys:
+                return -1
+            return max(int(k.rsplit("/", 1)[-1].split(".")[0]) for k in keys)
+        v = hint
+        while self.version_exists(v + 1):
+            v += 1
+        return v
+
+    # -- view reconstruction --------------------------------------------------
+    def load_view(self, version: int,
+                  base: Optional[DatasetView] = None) -> DatasetView:
+        """Reconstruct the DatasetView at ``version``.
+
+        ``base``: a previously reconstructed older view; in delta format the
+        chain walk then only covers (base.version, version].
+        """
+        if version < 0:
+            return DatasetView()
+        doc = self.read_doc(version)
+        fmt = doc.get("format", MANIFEST_FORMAT_FLAT)
+        if fmt == MANIFEST_FORMAT_FLAT:
+            return DatasetView(
+                version=doc["version"], base_step=doc.get("base_step", 0),
+                tgbs=[TGBDescriptor.unpack(r) for r in doc["tgbs"]],
+                producers=_unpack_producers(doc["producers"]),
+            )
+        # delta format: walk the chain back to base / snapshot.
+        chain = [doc]
+        while True:
+            head = chain[-1]
+            parent = head.get("parent_version", -1)
+            if "snapshot_tgbs" in head or parent < 0:
+                break
+            if base is not None and base.version == parent:
+                break
+            chain.append(self.read_doc(parent))
+        chain.reverse()
+        first = chain[0]
+        if "snapshot_tgbs" in first:
+            view = DatasetView(
+                version=first["version"],
+                base_step=first.get("snapshot_base_step", 0),
+                tgbs=[TGBDescriptor.unpack(r) for r in first["snapshot_tgbs"]],
+                producers=_unpack_producers(first["producers"]),
+            )
+            rest = chain[1:]
+        elif base is not None and first.get("parent_version", -1) == base.version:
+            view = base.copy()
+            rest = chain
+        else:  # genesis
+            view = DatasetView()
+            rest = chain
+        for doc_i in rest:
+            view.tgbs.extend(TGBDescriptor.unpack(r) for r in doc_i["delta_tgbs"])
+            view.producers = _unpack_producers(doc_i["producers"])
+            view.version = doc_i["version"]
+            new_base = doc_i.get("base_step", 0)
+            if new_base > view.base_step:
+                drop = new_base - view.base_step
+                view.tgbs = view.tgbs[drop:]
+                view.base_step = new_base
+        return view
+
+    # -- candidate construction ----------------------------------------------
+    def encode_candidate(self, parent: DatasetView, new_tgbs: List[TGBDescriptor],
+                         producers: Dict[str, ProducerState],
+                         trim_to_step: Optional[int] = None) -> Tuple[int, bytes]:
+        """Build the next manifest object from ``parent`` + this commit's TGBs.
+
+        Returns (version, raw_bytes). Applies logical trim up to
+        ``trim_to_step`` (drop list entries below it and advance base_step).
+        """
+        version = parent.version + 1
+        base_step = parent.base_step
+        tgbs = parent.tgbs
+        if trim_to_step is not None and trim_to_step > base_step:
+            keep_from = min(trim_to_step, parent.total_steps)
+            tgbs = tgbs[keep_from - base_step:]
+            base_step = keep_from
+        if self.format == MANIFEST_FORMAT_FLAT:
+            view = DatasetView(version=version, base_step=base_step,
+                               tgbs=list(tgbs) + list(new_tgbs),
+                               producers=producers)
+            return version, encode_flat_manifest(view)
+        snapshot = None
+        if version % self.snapshot_every == 0:
+            snapshot = DatasetView(version=version, base_step=base_step,
+                                   tgbs=list(tgbs) + list(new_tgbs),
+                                   producers=producers)
+        return version, encode_delta_manifest(
+            version=version, parent_version=parent.version, new_tgbs=new_tgbs,
+            producers=producers, base_step=base_step, snapshot_view=snapshot)

@@ -1,0 +1,207 @@
+"""Producer client (paper §3.1 stages 1-2, §5).
+
+Embedded in preprocessing workers. Responsibilities:
+
+  * Stage 1 — TGB materialization: serialize preprocessing output into immutable
+    TGB objects (uncoordinated, parallel across producers).
+  * Stage 2 — manifest commit: publish accumulated TGBs via the conditional-put
+    commit protocol, with cadence governed by a ``CommitPolicy`` (DAC by default).
+  * Exactly-once: resumption state (stream offset) is persisted in lockstep with
+    committed TGBs inside the manifest; a replacement process with the same
+    ``producer_id`` recovers it and resumes with no duplicates and no gaps.
+  * ``max_lag``: bounds how far ahead of the global watermark the producer pool
+    may run, bounding peak storage even if checkpointing stalls (paper §7.5).
+"""
+from __future__ import annotations
+
+import threading
+import uuid
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.commit import CommitProtocol
+from repro.core.dac import CommitPolicy, DACPolicy
+from repro.core.manifest import ManifestStore
+from repro.core.objectstore import Namespace
+from repro.core.tgb import TGBBuilder, TGBDescriptor, build_uniform_tgb
+
+
+@dataclass
+class ProducerStats:
+    tgbs_written: int = 0
+    bytes_written: int = 0
+    commit_attempts: int = 0
+    commit_successes: int = 0
+    commit_conflicts: int = 0
+    tgbs_committed: int = 0
+    bytes_committed: int = 0
+    manifest_bytes_written: int = 0
+    tau_sum: float = 0.0
+    gap_samples: List[float] = field(default_factory=list)
+    throttled_time: float = 0.0
+
+    @property
+    def success_rate(self) -> float:
+        return self.commit_successes / max(1, self.commit_attempts)
+
+
+class Producer:
+    """One preprocessing worker's BatchWeave producer client."""
+
+    def __init__(self, ns: Namespace, producer_id: str,
+                 dp: int, cp: int,
+                 policy: Optional[CommitPolicy] = None,
+                 manifests: Optional[ManifestStore] = None,
+                 max_lag: Optional[int] = None,
+                 epoch: int = 0):
+        self.ns = ns
+        self.store = ns.store
+        self.clock = self.store.clock
+        self.producer_id = producer_id
+        self.dp = dp
+        self.cp = cp
+        self.policy = policy or DACPolicy()
+        self.manifests = manifests or ManifestStore(ns)
+        self.protocol = CommitProtocol(self.manifests, producer_id, epoch=epoch)
+        self.max_lag = max_lag
+        self.stats = ProducerStats()
+        # stream offset of the next TGB this producer will create
+        self.next_offset = 0
+        # TGBs written to the store but not yet visible in a committed manifest
+        self.pending: List[TGBDescriptor] = []
+
+    # ------------------------------------------------------------------
+    def recover(self) -> int:
+        """Restart path: resume from the durable resumption state (§5.3).
+
+        Returns the stream offset to resume from. Any objects this incarnation's
+        predecessor wrote beyond the committed offset are orphans (invisible,
+        reclaimed later); we simply re-produce from offset+1 — exactly-once
+        *visibility* is what matters and the manifest enforces it.
+        """
+        committed = self.protocol.recover_offset()
+        self.next_offset = committed + 1
+        self.pending = []
+        return self.next_offset
+
+    # ------------------------------------------------------------------
+    def write_tgb(self, slice_payloads=None, uniform_slice_bytes: Optional[int] = None,
+                  num_samples: int = 0, token_count: int = 0) -> TGBDescriptor:
+        """Stage 1: materialize one TGB object (no coordination)."""
+        offset = self.next_offset
+        tgb_id = f"{self.producer_id}-{offset:012d}"
+        token = uuid.uuid4().hex[:8]
+        key = self.ns.tgb_key(self.producer_id, offset, token)
+        if slice_payloads is not None:
+            b = TGBBuilder(tgb_id, self.dp, self.cp, self.producer_id, offset,
+                           num_samples=num_samples, token_count=token_count)
+            for (d, c), payload in slice_payloads.items():
+                b.add_slice(d, c, payload)
+            blob = b.build()
+        else:
+            blob = build_uniform_tgb(tgb_id, self.dp, self.cp, self.producer_id,
+                                     offset, uniform_slice_bytes or 1024,
+                                     num_samples=num_samples,
+                                     token_count=token_count)
+        self.store.put(key, blob)
+        desc = TGBDescriptor(
+            tgb_id=tgb_id, object_key=key, size_bytes=len(blob),
+            dp=self.dp, cp=self.cp, num_samples=num_samples,
+            token_count=token_count, producer_id=self.producer_id,
+            producer_seq=offset)
+        self.pending.append(desc)
+        self.next_offset = offset + 1
+        self.stats.tgbs_written += 1
+        self.stats.bytes_written += len(blob)
+        return desc
+
+    # ------------------------------------------------------------------
+    def maybe_commit(self, trim_to_step: Optional[int] = None, force: bool = False) -> bool:
+        """Attempt a commit if the policy's cadence allows. Returns True iff a
+        commit attempt happened and succeeded."""
+        now = self.clock.now()
+        if not force and not self.policy.should_attempt(len(self.pending), now):
+            return False
+        if not self.pending:
+            return False
+        result, still_pending = self.protocol.try_commit(
+            self.pending, trim_to_step=trim_to_step)
+        self.stats.commit_attempts += 1
+        self.stats.tau_sum += result.tau_obs
+        self.stats.manifest_bytes_written += result.manifest_bytes
+        if result.success:
+            self.stats.commit_successes += 1
+            self.stats.tgbs_committed += result.committed_tgbs
+            self.stats.bytes_committed += sum(t.size_bytes for t in self.pending)
+            self.pending = []
+        else:
+            self.stats.commit_conflicts += 1
+            self.pending = still_pending
+        self.policy.on_outcome(result.success, result.tau_obs,
+                               result.n_producers, self.clock.now())
+        if isinstance(self.policy, DACPolicy):
+            self.stats.gap_samples.append(self.policy.gap)
+        return result.success
+
+    def finalize(self, max_attempts: int = 1000) -> None:
+        """Drain remaining uncommitted TGBs before exiting (Alg. 1 finalization)."""
+        attempts = 0
+        while self.pending and attempts < max_attempts:
+            ok = self.maybe_commit(force=True)
+            attempts += 1
+            if not ok and self.pending:
+                # brief backoff using the policy's current notion of gap
+                gap = getattr(self.policy, "gap", 0.01) or 0.01
+                self.clock.sleep(min(gap, 0.25))
+        if self.pending:
+            raise RuntimeError(f"{self.producer_id}: finalize failed to drain "
+                               f"{len(self.pending)} TGBs")
+
+    # ------------------------------------------------------------------
+    def lag_exceeded(self) -> bool:
+        """True if production should pause: published-but-unconsumed TGBs exceed
+        max_lag relative to the trim marker (W_global surrogate)."""
+        if self.max_lag is None:
+            return False
+        view = self.protocol.view
+        try:
+            raw = self.store.get(self.ns.trim_key())
+            import msgpack
+            safe_step = msgpack.unpackb(raw, raw=False)["safe_step"]
+        except KeyError:
+            safe_step = 0
+        ahead = (view.total_steps + len(self.pending)) - safe_step
+        return ahead >= self.max_lag
+
+
+def run_producer_loop(producer: Producer, n_tgbs: int,
+                      slice_bytes: int,
+                      stop: Optional[threading.Event] = None,
+                      produce_delay_s: float = 0.0,
+                      payload_fn: Optional[Callable[[int], dict]] = None,
+                      deadline_s: Optional[float] = None) -> ProducerStats:
+    """Drive a producer for ``n_tgbs`` TGBs (benchmark/ingest helper thread body)."""
+    clock = producer.clock
+    t_start = clock.now()
+    produced = 0
+    while produced < n_tgbs:
+        if stop is not None and stop.is_set():
+            break
+        if deadline_s is not None and clock.now() - t_start > deadline_s:
+            break
+        if producer.lag_exceeded():
+            t0 = clock.now()
+            clock.sleep(0.05)
+            producer.stats.throttled_time += clock.now() - t0
+            producer.maybe_commit()
+            continue
+        if produce_delay_s:
+            clock.sleep(produce_delay_s)
+        if payload_fn is not None:
+            producer.write_tgb(slice_payloads=payload_fn(producer.next_offset))
+        else:
+            producer.write_tgb(uniform_slice_bytes=slice_bytes)
+        produced += 1
+        producer.maybe_commit()
+    producer.finalize()
+    return producer.stats

@@ -1,0 +1,219 @@
+"""Transactional Global Batch (TGB) physical layout (paper §4.1).
+
+A TGB materializes one Global Batch ``B_s`` as an immutable object:
+
+    [slice(0,0)][slice(0,1)] ... [slice(D-1,C-1)] [footer msgpack] [u64 footer_len] [u64 magic]
+
+* ``D x C`` contiguous data slices, row-major ``(d * C + c)``; slice ``(d, c)``
+  holds the token chunk for CP rank ``c`` of DP replica ``d``. TP/PP ranks are
+  transparent: they derive identical ``(d, c)`` coordinates and read the same slice.
+* The footer index records byte offset + length + crc32 per slice, so a consumer
+  reads the footer once (two small range reads), caches it, and thereafter issues
+  exactly one targeted range read per step — read amplification ~= 1x.
+
+Objects are write-once: producers write independently, consumers cache without
+coherence overhead.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import msgpack
+
+from repro.core.objectstore import ObjectStore
+
+TGB_MAGIC = 0x7B47B347000054B2  # arbitrary 64-bit magic ("TGB")
+_TAIL = struct.Struct("<QQ")  # footer_len, magic
+TAIL_BYTES = _TAIL.size
+
+
+class TGBFormatError(ValueError):
+    pass
+
+
+@dataclass(frozen=True)
+class TGBFooter:
+    """Lightweight per-TGB index: one entry per (d, c) slice."""
+
+    tgb_id: str
+    dp: int
+    cp: int
+    # row-major (d * cp + c) -> (offset, length, crc32)
+    slices: Tuple[Tuple[int, int, int], ...]
+    num_samples: int
+    token_count: int
+    producer_id: str
+    producer_seq: int
+
+    def slice_entry(self, d: int, c: int) -> Tuple[int, int, int]:
+        if not (0 <= d < self.dp and 0 <= c < self.cp):
+            raise IndexError(f"slice ({d},{c}) out of range ({self.dp}x{self.cp})")
+        return self.slices[d * self.cp + c]
+
+    def to_bytes(self) -> bytes:
+        return msgpack.packb({
+            "tgb_id": self.tgb_id,
+            "dp": self.dp,
+            "cp": self.cp,
+            "slices": [list(s) for s in self.slices],
+            "num_samples": self.num_samples,
+            "token_count": self.token_count,
+            "producer_id": self.producer_id,
+            "producer_seq": self.producer_seq,
+        }, use_bin_type=True)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "TGBFooter":
+        d = msgpack.unpackb(raw, raw=False)
+        return TGBFooter(
+            tgb_id=d["tgb_id"], dp=d["dp"], cp=d["cp"],
+            slices=tuple(tuple(s) for s in d["slices"]),
+            num_samples=d["num_samples"], token_count=d["token_count"],
+            producer_id=d["producer_id"], producer_seq=d["producer_seq"],
+        )
+
+
+class TGBBuilder:
+    """Assemble a TGB from per-(d, c) slice payloads."""
+
+    def __init__(self, tgb_id: str, dp: int, cp: int, producer_id: str,
+                 producer_seq: int, num_samples: int = 0, token_count: int = 0):
+        self.tgb_id = tgb_id
+        self.dp = dp
+        self.cp = cp
+        self.producer_id = producer_id
+        self.producer_seq = producer_seq
+        self.num_samples = num_samples
+        self.token_count = token_count
+        self._slices: Dict[Tuple[int, int], bytes] = {}
+
+    def add_slice(self, d: int, c: int, payload: bytes) -> "TGBBuilder":
+        if not (0 <= d < self.dp and 0 <= c < self.cp):
+            raise IndexError(f"slice ({d},{c}) out of range ({self.dp}x{self.cp})")
+        if (d, c) in self._slices:
+            raise ValueError(f"slice ({d},{c}) already added")
+        self._slices[(d, c)] = payload
+        return self
+
+    def build(self) -> bytes:
+        missing = [(d, c) for d in range(self.dp) for c in range(self.cp)
+                   if (d, c) not in self._slices]
+        if missing:
+            raise TGBFormatError(f"incomplete TGB, missing slices {missing[:4]}...")
+        body = bytearray()
+        entries: List[Tuple[int, int, int]] = []
+        for d in range(self.dp):
+            for c in range(self.cp):
+                payload = self._slices[(d, c)]
+                entries.append((len(body), len(payload), zlib.crc32(payload)))
+                body += payload
+        footer = TGBFooter(
+            tgb_id=self.tgb_id, dp=self.dp, cp=self.cp, slices=tuple(entries),
+            num_samples=self.num_samples, token_count=self.token_count,
+            producer_id=self.producer_id, producer_seq=self.producer_seq,
+        ).to_bytes()
+        tail = _TAIL.pack(len(footer), TGB_MAGIC)
+        return bytes(body) + footer + tail
+
+
+def build_uniform_tgb(tgb_id: str, dp: int, cp: int, producer_id: str,
+                      producer_seq: int, slice_bytes: int,
+                      fill: Optional[bytes] = None,
+                      num_samples: int = 0, token_count: int = 0) -> bytes:
+    """Convenience: build a TGB whose every slice is ``slice_bytes`` long
+    (synthetic benchmark payloads)."""
+    b = TGBBuilder(tgb_id, dp, cp, producer_id, producer_seq,
+                   num_samples=num_samples, token_count=token_count)
+    for d in range(dp):
+        for c in range(cp):
+            if fill is not None:
+                payload = (fill * (slice_bytes // max(1, len(fill)) + 1))[:slice_bytes]
+            else:
+                seed = (hash((tgb_id, d, c)) & 0xFF)
+                payload = bytes([seed]) * slice_bytes
+            b.add_slice(d, c, payload)
+    return b.build()
+
+
+def parse_footer(tail_and_footer_reader) -> TGBFooter:
+    raise NotImplementedError  # see TGBReader
+
+
+class TGBReader:
+    """Read slices of a TGB object via targeted range reads.
+
+    Footer read costs two small range reads (tail, then footer) the first time;
+    callers should cache the returned footer per TGB (the consumer client does).
+    """
+
+    def __init__(self, store: ObjectStore, object_key: str,
+                 object_size: Optional[int] = None):
+        self.store = store
+        self.key = object_key
+        self._size = object_size
+        self._footer: Optional[TGBFooter] = None
+
+    @property
+    def size(self) -> int:
+        if self._size is None:
+            self._size = self.store.head(self.key)
+        return self._size
+
+    def footer(self) -> TGBFooter:
+        if self._footer is None:
+            size = self.size
+            tail_raw = self.store.get_range(self.key, size - TAIL_BYTES, TAIL_BYTES)
+            if len(tail_raw) != TAIL_BYTES:
+                raise TGBFormatError(f"{self.key}: truncated tail")
+            footer_len, magic = _TAIL.unpack(tail_raw)
+            if magic != TGB_MAGIC:
+                raise TGBFormatError(f"{self.key}: bad magic {magic:#x}")
+            footer_raw = self.store.get_range(
+                self.key, size - TAIL_BYTES - footer_len, footer_len)
+            self._footer = TGBFooter.from_bytes(footer_raw)
+        return self._footer
+
+    def set_cached_footer(self, footer: TGBFooter, size: int) -> None:
+        self._footer = footer
+        self._size = size
+
+    def read_slice(self, d: int, c: int, verify: bool = True) -> bytes:
+        off, length, crc = self.footer().slice_entry(d, c)
+        data = self.store.get_range(self.key, off, length)
+        if len(data) != length:
+            raise TGBFormatError(f"{self.key}: short read for slice ({d},{c})")
+        if verify and zlib.crc32(data) != crc:
+            raise TGBFormatError(f"{self.key}: crc mismatch for slice ({d},{c})")
+        return data
+
+    def read_full(self) -> bytes:
+        """Dense read (baseline): fetch the whole object."""
+        return self.store.get(self.key)
+
+
+@dataclass(frozen=True)
+class TGBDescriptor:
+    """Manifest entry for one TGB (paper §4.2 'TGB list'). The descriptor's
+    position in the authoritative list defines its global step index."""
+
+    tgb_id: str
+    object_key: str
+    size_bytes: int
+    dp: int
+    cp: int
+    num_samples: int
+    token_count: int
+    producer_id: str
+    producer_seq: int  # stream offset within the producer (exactly-once key)
+
+    def pack(self) -> list:
+        return [self.tgb_id, self.object_key, self.size_bytes, self.dp, self.cp,
+                self.num_samples, self.token_count, self.producer_id,
+                self.producer_seq]
+
+    @staticmethod
+    def unpack(row: Sequence) -> "TGBDescriptor":
+        return TGBDescriptor(*row)

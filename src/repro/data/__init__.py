@@ -1,0 +1,20 @@
+"""Data pipeline substrate: synthetic multimodal sources, online packing, the
+disaggregated preprocessing pipeline, and the two baseline data planes the
+paper evaluates against (colocated 'Local', Kafka-like MQ)."""
+from repro.data.colocated import ColocatedConfig, ColocatedPipeline, StepTrace
+from repro.data.mq import (BrokerConfig, KafkaSimBroker, KafkaTGBConsumer,
+                           KafkaTGBProducer, MessageTooLarge, RequestTimeout)
+from repro.data.packing import GlobalBatchPacker, PackedBatch, decode_slice
+from repro.data.pipeline import PipelineConfig, PreprocessWorker
+from repro.data.sources import (PreprocessConfig, PreprocessResult, RawRecord,
+                                SyntheticSource, expansion_table, preprocess)
+
+__all__ = [
+    "ColocatedConfig", "ColocatedPipeline", "StepTrace",
+    "BrokerConfig", "KafkaSimBroker", "KafkaTGBConsumer", "KafkaTGBProducer",
+    "MessageTooLarge", "RequestTimeout",
+    "GlobalBatchPacker", "PackedBatch", "decode_slice",
+    "PipelineConfig", "PreprocessWorker",
+    "PreprocessConfig", "PreprocessResult", "RawRecord", "SyntheticSource",
+    "expansion_table", "preprocess",
+]

@@ -1,0 +1,133 @@
+"""Colocated dataloader baseline (paper §2.2, §7.1 'Local').
+
+Expert-tuned in-rank pipeline: N worker threads do sample-level preprocessing on
+the trainer node, feed a bounded queue into a collator, which feeds the training
+step. Its two structural limits — the ones BatchWeave removes — are modeled
+explicitly:
+
+  * **resource contention**: preprocessing threads share CPU cycles/memory
+    bandwidth with the training process on the same node. We model a node with
+    ``node_cpu`` cores: the training step itself needs ``train_cpu`` cores'
+    worth of host work; preprocessing demand beyond the remaining cores slows
+    *both* sides by the oversubscription factor.
+  * **no failure isolation**: a preprocessing crash stalls the trainer (the
+    queue empties and the step blocks), and the two cannot scale independently.
+
+The simulation advances a shared Clock, producing the same steps/s and P50/P95
+metrics as the BatchWeave/Kafka paths in fig5.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from queue import Empty, Full, Queue
+from typing import Callable, List, Optional
+
+from repro.core.clock import Clock, SystemClock
+
+
+@dataclass
+class ColocatedConfig:
+    workers: int = 12            # paper: 12 local worker threads per rank
+    queue_depth: int = 8
+    node_cpu: float = 64.0       # cores per node (paper infra)
+    train_cpu: float = 16.0      # host-side cores the training step consumes
+    trainer_ranks_per_node: int = 8
+
+
+@dataclass
+class StepTrace:
+    latencies: List[float] = field(default_factory=list)
+    stalls: int = 0
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies:
+            return float("nan")
+        xs = sorted(self.latencies)
+        i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
+        return xs[i]
+
+
+class ColocatedPipeline:
+    """Threaded colocated pipeline with an explicit contention model."""
+
+    def __init__(self, cfg: ColocatedConfig,
+                 preprocess_cost_s: Callable[[int], float],
+                 batch_cpu_items: int,
+                 clock: Optional[Clock] = None):
+        """``preprocess_cost_s(i)`` is the nominal CPU-seconds for sample i on an
+        idle core; ``batch_cpu_items`` samples form one global-batch equivalent."""
+        self.cfg = cfg
+        self.clock = clock or SystemClock()
+        self.preprocess_cost_s = preprocess_cost_s
+        self.batch_cpu_items = batch_cpu_items
+        self.queue: Queue = Queue(maxsize=cfg.queue_depth)
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._sample_idx = 0
+        self._idx_lock = threading.Lock()
+        self.crashed = threading.Event()
+
+    # -- contention model -------------------------------------------------------
+    def _slowdown(self) -> float:
+        """Oversubscription factor: demand / capacity when demand exceeds the
+        node's cores. Preprocessing demand = workers (each wants a core);
+        training demand = train_cpu per node."""
+        c = self.cfg
+        demand = c.workers * c.trainer_ranks_per_node + c.train_cpu
+        return max(1.0, demand / c.node_cpu)
+
+    # -- producer side ------------------------------------------------------------
+    def _worker(self):
+        while not self._stop.is_set() and not self.crashed.is_set():
+            with self._idx_lock:
+                i = self._sample_idx
+                self._sample_idx += 1
+            cost = self.preprocess_cost_s(i) * self._slowdown()
+            self.clock.sleep(cost)
+            item = i
+            while not self._stop.is_set():
+                try:
+                    self.queue.put(item, timeout=0.05)
+                    break
+                except Full:
+                    continue
+
+    def start(self):
+        for w in range(self.cfg.workers):
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"coloc-worker-{w}")
+            t.start()
+            self._threads.append(t)
+
+    def stop(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2)
+        self._threads.clear()
+
+    def inject_crash(self):
+        """Preprocessing failure: all workers die; the trainer stalls (no
+        failure isolation)."""
+        self.crashed.set()
+
+    # -- trainer side ---------------------------------------------------------------
+    def run_training(self, steps: int, gpu_step_s: float,
+                     stall_timeout_s: float = 30.0) -> StepTrace:
+        trace = StepTrace()
+        slowdown = self._slowdown()
+        for _ in range(steps):
+            t0 = self.clock.now()
+            got = 0
+            while got < self.batch_cpu_items:
+                try:
+                    self.queue.get(timeout=stall_timeout_s)
+                    got += 1
+                except Empty:
+                    trace.stalls += 1
+                    if self.crashed.is_set():
+                        return trace  # job stalls permanently
+            # the GPU step also pays the host-side contention tax
+            self.clock.sleep(gpu_step_s * slowdown)
+            trace.latencies.append(self.clock.now() - t0)
+        return trace

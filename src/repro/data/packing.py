@@ -1,0 +1,96 @@
+"""Online token packing into Global Batches (paper §2.1 'batch membership').
+
+Batch boundaries are known only after preprocessing completes: the packer
+accumulates variable-size preprocessed sample outputs and emits a TGB's worth of
+slice payloads once ``global_batch x seq_len`` tokens are available. Slice
+``(d, c)`` carries tokens for DP replica ``d`` (batch-dim split) and CP rank
+``c`` (sequence-dim split), stored as little-endian int32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class PackedBatch:
+    """One Global Batch worth of token data, pre-split into (d, c) slices."""
+
+    slices: Dict[Tuple[int, int], bytes]
+    num_samples: int
+    token_count: int
+
+
+class GlobalBatchPacker:
+    """Accumulate token streams; emit complete (D x C)-sliced global batches.
+
+    Sequences longer than ``seq_len`` are chunked; shorter remainders are packed
+    contiguously (document packing) so no padding is wasted. Membership of each
+    batch is decided *by the packer output order* — a runtime artifact, exactly
+    the property BatchWeave's manifest publishes atomically.
+    """
+
+    def __init__(self, global_batch: int, seq_len: int, dp: int, cp: int,
+                 dtype=np.int32):
+        if global_batch % dp:
+            raise ValueError(f"global_batch {global_batch} % dp {dp} != 0")
+        if seq_len % cp:
+            raise ValueError(f"seq_len {seq_len} % cp {cp} != 0")
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.dp = dp
+        self.cp = cp
+        self.dtype = np.dtype(dtype)
+        self._buf: List[np.ndarray] = []
+        self._buffered_tokens = 0
+        self._samples_in_buf = 0
+
+    @property
+    def tokens_per_batch(self) -> int:
+        return self.global_batch * self.seq_len
+
+    def add_tokens(self, tokens: np.ndarray, samples: int = 1) -> List[PackedBatch]:
+        """Feed preprocessed tokens; returns zero or more completed batches."""
+        tokens = np.asarray(tokens, dtype=self.dtype).ravel()
+        self._buf.append(tokens)
+        self._buffered_tokens += tokens.size
+        self._samples_in_buf += samples
+        out = []
+        while self._buffered_tokens >= self.tokens_per_batch:
+            out.append(self._emit())
+        return out
+
+    def _emit(self) -> PackedBatch:
+        need = self.tokens_per_batch
+        chunks, got = [], 0
+        while got < need:
+            head = self._buf[0]
+            take = min(head.size, need - got)
+            chunks.append(head[:take])
+            if take == head.size:
+                self._buf.pop(0)
+            else:
+                self._buf[0] = head[take:]
+            got += take
+        flat = np.concatenate(chunks)
+        self._buffered_tokens -= need
+        samples = self._samples_in_buf
+        self._samples_in_buf = 0  # attribute all buffered samples to this batch
+        grid = flat.reshape(self.global_batch, self.seq_len)
+        slices: Dict[Tuple[int, int], bytes] = {}
+        bs = self.global_batch // self.dp
+        cs = self.seq_len // self.cp
+        for d in range(self.dp):
+            for c in range(self.cp):
+                block = grid[d * bs:(d + 1) * bs, c * cs:(c + 1) * cs]
+                slices[(d, c)] = np.ascontiguousarray(block).tobytes()
+        return PackedBatch(slices=slices, num_samples=samples, token_count=need)
+
+
+def decode_slice(payload: bytes, batch_per_dp: int, seq_per_cp: int,
+                 dtype=np.int32) -> np.ndarray:
+    """Inverse of the packer's slice serialization (consumer side)."""
+    arr = np.frombuffer(payload, dtype=dtype)
+    return arr.reshape(batch_per_dp, seq_per_cp)

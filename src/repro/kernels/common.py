@@ -1,0 +1,14 @@
+"""Shared kernel utilities."""
+from __future__ import annotations
+
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas TPU kernels execute in interpret mode off-TPU (this container is
+    CPU-only; TPU v5e is the compile TARGET)."""
+    return jax.default_backend() != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

@@ -1,0 +1,3 @@
+from repro.kernels.decode_attention import ops, ref
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+from repro.kernels.decode_attention.ops import decode_attention

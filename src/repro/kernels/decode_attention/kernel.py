@@ -1,0 +1,112 @@
+"""GQA flash-decode, Pallas TPU.
+
+One new token attends a long KV cache. Tiling (grid step (b, ik)):
+
+  * q tile    (H, dh)          — tiny, VMEM-resident across the cache sweep
+  * k/v tiles (block_k, G, dh) — streamed HBM -> VMEM; this is the bandwidth-
+                                 bound stream the kernel exists to saturate
+  * scratch   m/l (H,), acc (H, dh) fp32 persist across ik
+
+GQA is handled by reshaping q to (G, rep, dh) INSIDE the kernel, so the cache
+is read once at its native G heads — no repeated-KV materialization (the pure
+XLA path pays a (B, T, H, dh) broadcast; this kernel is the decode-memory
+hillclimb in EXPERIMENTS.md §Perf).
+
+The valid-length bound enters as a scalar (SMEM) so fully-invalid tiles are
+skipped without recompilation.
+
+VMEM per step (block_k = 256, G = 8, dh = 128, bf16): k/v 2 x 512 KiB
++ q/acc ~128 KiB ~= 1.2 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                scale: float, block_k: int, nk: int, rep: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    cur = idx_ref[0]
+    k_start = ik * block_k
+
+    @pl.when(k_start <= cur)
+    def _compute():
+        H, dh = q_ref.shape[1], q_ref.shape[2]
+        G = k_ref.shape[2]
+        q = q_ref[0].astype(jnp.float32) * scale            # (H, dh)
+        qg = q.reshape(G, rep, dh)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, G, dh)
+        v = v_ref[0].astype(jnp.float32)
+        kg = jnp.transpose(k, (1, 0, 2))                    # (G, bk, dh)
+        vg = jnp.transpose(v, (1, 0, 2))
+        s = jax.lax.dot_general(qg, kg, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)  # (G,rep,bk)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(kpos <= cur, s, NEG_INF)
+        s = s.reshape(H, -1)                                # (H, bk)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        pg = p.reshape(G, rep, -1)
+        og = jax.lax.dot_general(pg, vg, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)  # (G,rep,dh)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + og.reshape(H, dh)
+        m_sc[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cur_index, block_k: int = 256,
+                         interpret: bool = True) -> jax.Array:
+    B, H, dh = q.shape
+    T, G = k_cache.shape[1], k_cache.shape[2]
+    assert H % G == 0
+    rep = H // G
+    block_k = min(block_k, T)
+    assert T % block_k == 0, (T, block_k)
+    nk = T // block_k
+    scale = 1.0 / np.sqrt(dh)
+    idx = jnp.asarray(cur_index, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, block_k=block_k,
+                               nk=nk, rep=rep)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, H, dh), lambda b, ik: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, G, dh), lambda b, ik: (b, ik, 0, 0)),
+            pl.BlockSpec((1, block_k, G, dh), lambda b, ik: (b, ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, dh), lambda b, ik: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, q, k_cache, v_cache)

@@ -1,0 +1,12 @@
+"""jit'd wrapper for the flash-decode kernel (no gradient: serving-only)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.decode_attention.kernel import decode_attention_fwd
+
+
+def decode_attention(q, k_cache, v_cache, cur_index, block_k: int = 256):
+    return decode_attention_fwd(q, k_cache, v_cache, cur_index,
+                                block_k=block_k, interpret=use_interpret())

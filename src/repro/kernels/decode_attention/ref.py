@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cur_index) -> jax.Array:
+    """q: (B, H, dh); caches: (B, T, G, dh); positions [0, cur_index] valid."""
+    B, H, dh = q.shape
+    T, G = k_cache.shape[1], k_cache.shape[2]
+    kh = jnp.repeat(k_cache, H // G, axis=2).astype(jnp.float32)
+    vh = jnp.repeat(v_cache, H // G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kh) / np.sqrt(dh)
+    valid = jnp.arange(T)[None, None, :] <= cur_index
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", p, vh)
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention import ops, ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, S, H, dh); k/v: (B, T, G, dh) with H % G == 0 -> (B, S, H, dh)."""
+    B, S, H, dh = q.shape
+    T, G = k.shape[1], k.shape[2]
+    rep = H // G
+    kh = jnp.repeat(k, rep, axis=2)
+    vh = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) / np.sqrt(dh)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.rmsnorm import ops, ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+from repro.kernels.rmsnorm.ops import rmsnorm

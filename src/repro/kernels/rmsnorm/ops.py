@@ -1,0 +1,29 @@
+"""jit'd wrapper: Pallas forward + analytic backward via custom_vjp."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, scale, eps: float = 1e-5):
+    return rmsnorm_fwd(x, scale, eps=eps, interpret=use_interpret())
+
+
+def _fwd(x, scale, eps):
+    return rmsnorm(x, scale, eps), (x, scale)
+
+
+def _bwd(eps, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x_, s_: rmsnorm_ref(x_, s_, eps), x, scale)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

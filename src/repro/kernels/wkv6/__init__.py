@@ -1,0 +1,3 @@
+from repro.kernels.wkv6 import ops, ref
+from repro.kernels.wkv6.kernel import wkv6_fwd
+from repro.kernels.wkv6.ops import wkv6

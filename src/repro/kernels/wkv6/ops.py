@@ -1,0 +1,30 @@
+"""jit'd wrapper: Pallas WKV6 forward + recomputed backward."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.wkv6.kernel import wkv6_fwd
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def wkv6(r, k, v, w, u, chunk: int = 32):
+    y, _state = wkv6_fwd(r, k, v, w, u, chunk=chunk,
+                         interpret=use_interpret())
+    return y
+
+
+def _fwd(r, k, v, w, u, chunk):
+    return wkv6(r, k, v, w, u, chunk), (r, k, v, w, u)
+
+
+def _bwd(chunk, res, g):
+    r, k, v, w, u = res
+    _, vjp = jax.vjp(lambda *a: wkv6_ref(*a)[0], r, k, v, w, u)
+    return vjp(g)
+
+
+wkv6.defvjp(_fwd, _bwd)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the WKV6 recurrence (per-step, the ground truth).
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0=None):
+    """r/k/v/w: (B, S, H, dh); u: (H, dh). Returns (y, final_state)."""
+    B, S, H, dh = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def step(S_, xs):
+        rt, kt, vt, wt = (x.astype(jnp.float32) for x in xs)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       S_ + u.astype(jnp.float32)[None, :, :, None] * kv)
+        S_new = wt[..., None] * S_ + kv
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return y.astype(r.dtype), state

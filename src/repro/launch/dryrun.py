@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: AOT lower + compile every (architecture x input shape)
+on the production meshes, proving the distribution config is coherent.
+
+The two lines above MUST precede any other import (jax locks the device count
+on first init); do NOT set this flag globally — smoke tests and benches see
+one device.
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits a 16 GB v5e)
+  * compiled.cost_analysis()    — raw XLA numbers (loop bodies counted once)
+  * loop-corrected static HLO analysis (repro.launch.hlo_analysis): FLOPs,
+    bytes, per-kind collective link-bytes — the roofline inputs.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --arch all --shape all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, canonical, get_config
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.common import abstract_params
+from repro.models.config import ModelConfig
+from repro.sharding.specs import make_rules, param_shardings, use_rules
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import StepConfig, input_specs, make_train_step
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def default_microbatches(cfg: ModelConfig, global_batch: int, dp: int) -> int:
+    """Largest power-of-two microbatch count keeping (GB/n) % dp == 0 and
+    per-device microbatch around 1-2 sequences for big models."""
+    n = 1
+    target = 8 if cfg.d_model >= 4096 else 2
+    while n < target and (global_batch // (n * 2)) % dp == 0 \
+            and global_batch // (n * 2) >= dp:
+        n *= 2
+    return n
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh,
+               microbatches: Optional[int] = None,
+               seq_res: bool = False,
+               overrides: Optional[Dict[str, Any]] = None,
+               opt_overrides: Optional[Dict[str, Any]] = None,
+               grad_accum_dtype: str = "float32"):
+    """Returns (fn, args, in_shardings, out_shardings, donate, meta)."""
+    shape = SHAPES[shape_name]
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    rules = make_rules(mesh, cfg.num_heads, cfg.num_kv_heads)
+    if seq_res:
+        rules.mapping["seq_res"] = ("model",)
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+
+    specs = M.param_specs(cfg)
+    params_sds = abstract_params(specs)
+    params_sh = param_shardings(rules, specs)
+
+    binputs = input_specs(cfg, shape.global_batch, shape.seq_len, shape.kind)
+    batch_sds = {k: s for k, (s, _a) in binputs.items()}
+    batch_sh = {k: rules.sharding(a, s.shape) for k, (s, a) in binputs.items()}
+
+    meta = {"dp": dp, "rules": {k: list(v) if v else None
+                                for k, v in rules.mapping.items()}}
+
+    if shape.kind == "train":
+        n_micro = microbatches or default_microbatches(
+            cfg, shape.global_batch, dp)
+        meta["microbatches"] = n_micro
+        opt_cfg = OptimizerConfig(**(opt_overrides or {}))
+        meta["opt_state_dtype"] = opt_cfg.state_dtype
+        opt_dt = jnp.dtype(opt_cfg.state_dtype)
+        train_step = make_train_step(
+            cfg, opt_cfg,
+            StepConfig(microbatches=n_micro,
+                       grad_accum_dtype=grad_accum_dtype),
+            param_spec_tree=specs)
+        as_opt = lambda tree: jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, opt_dt), tree)
+        opt_sds = {"m": as_opt(params_sds), "v": as_opt(params_sds),
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_sh = {"m": params_sh, "v": params_sh, "step": _repl(mesh)}
+        metrics_sh = {k: _repl(mesh)
+                      for k in ("loss", "aux_loss", "grad_norm", "lr")}
+
+        def fn(params, opt_state, batch):
+            with use_rules(rules):
+                return train_step(params, opt_state, batch)
+
+        return (fn, (params_sds, opt_sds, batch_sds),
+                (params_sh, opt_sh, batch_sh),
+                (params_sh, opt_sh, metrics_sh), (0, 1), meta)
+
+    logits_shape = ((shape.global_batch, cfg.num_codebooks, cfg.vocab_size)
+                    if cfg.family == "audio"
+                    else (shape.global_batch, cfg.vocab_size))
+    logits_axes = (("batch", None, "vocab") if cfg.family == "audio"
+                   else ("batch", "vocab"))
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            with use_rules(rules):
+                return M.prefill(cfg, params, batch)
+
+        # output shardings: derive the state tree from decode_state_specs axes
+        state_specs = M.decode_state_specs(cfg, shape.global_batch,
+                                           shape.seq_len)
+        state_sh = {k: rules.sharding(a, s.shape)
+                    for k, (s, a) in state_specs.items()}
+        logits_sh = rules.sharding(logits_axes, logits_shape)
+        out_sh = (logits_sh, state_sh)
+        return (fn, (params_sds, batch_sds), (params_sh, batch_sh),
+                out_sh, (), meta)
+
+    # decode
+    state_specs = M.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    state_sds = {k: s for k, (s, _a) in state_specs.items()}
+    state_sh = {k: rules.sharding(a, s.shape)
+                for k, (s, a) in state_specs.items()}
+    tok_sds = batch_sds["tokens"]
+    tok_sh = batch_sh["tokens"]
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_sh = rules.sharding(logits_axes, logits_shape)
+
+    def fn(params, state, tokens, pos):
+        with use_rules(rules):
+            return M.decode_step(cfg, params, state, tokens, pos)
+
+    return (fn, (params_sds, state_sds, tok_sds, pos_sds),
+            (params_sh, state_sh, tok_sh, _repl(mesh)),
+            (logits_sh, state_sh), (1,), meta)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             microbatches: Optional[int] = None, seq_res: bool = False,
+             overrides: Optional[Dict[str, Any]] = None,
+             opt_overrides: Optional[Dict[str, Any]] = None,
+             grad_accum_dtype: str = "float32",
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "family": cfg.family,
+    }
+    ok, reason = shape_applicable(shape, cfg)
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        return record
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, donate, meta = build_cell(
+            cfg, shape_name, mesh, microbatches=microbatches,
+            seq_res=seq_res, overrides=overrides,
+            opt_overrides=opt_overrides,
+            grad_accum_dtype=grad_accum_dtype)
+        record.update(meta)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        ma = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        record["memory"]["peak_per_device_bytes"] = (
+            record["memory"]["argument_bytes"]
+            + record["memory"]["temp_bytes"]
+            + record["memory"]["output_bytes"]
+            - record["memory"]["alias_bytes"])
+        ca = compiled.cost_analysis() or {}
+        record["xla_cost"] = {k: float(v) for k, v in ca.items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed",
+                                        "transcendentals")}
+        txt = compiled.as_text()
+        costs = hlo_analysis.analyze(txt)
+        record["hlo"] = {
+            "flops": costs.flops,
+            "bytes_accessed": costs.bytes_accessed,
+            "collective_bytes": costs.collective_bytes,
+            "collective_count": costs.collective_count,
+            "total_collective_bytes": costs.total_collective_bytes,
+            "dot_count": costs.dot_count,
+            "while_loops": costs.while_loops[:16],
+        }
+        record["timing"] = {"lower_s": t_lower - t0,
+                            "compile_s": t_compile - t_lower}
+        record["status"] = "ok"
+        if verbose:
+            mem = record["memory"]
+            print(f"[dryrun] OK {arch} x {shape_name} mesh={record['mesh']} "
+                  f"args={mem['argument_bytes']/2**30:.2f}GiB "
+                  f"temp={mem['temp_bytes']/2**30:.2f}GiB "
+                  f"flops={costs.flops:.3e} "
+                  f"coll={costs.total_collective_bytes:.3e}B "
+                  f"(lower {record['timing']['lower_s']:.1f}s, "
+                  f"compile {record['timing']['compile_s']:.1f}s)")
+            print(f"  memory_analysis: {ma}")
+            print(f"  cost_analysis(flops)={ca.get('flops')} "
+                  f"bytes={ca.get('bytes accessed')}")
+    except Exception as e:  # a failure here is a bug in the system
+        record["status"] = "failed"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] FAIL {arch} x {shape_name}: {record['error']}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-res", action="store_true",
+                    help="shard the residual stream's seq dim over 'model'")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides k=v (e.g. remat=False)")
+    ap.add_argument("--opt-override", action="append", default=[],
+                    help="optimizer overrides k=v (e.g. state_dtype=bfloat16)")
+    ap.add_argument("--grad-accum-dtype", default="float32")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [canonical(a) for a in
+                                                 args.arch.split(",")]
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    overrides: Dict[str, Any] = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            overrides[k] = json.loads(v)
+        except json.JSONDecodeError:
+            overrides[k] = v
+    opt_overrides: Dict[str, Any] = {}
+    for ov in args.opt_override:
+        k, v = ov.split("=", 1)
+        try:
+            opt_overrides[k] = json.loads(v)
+        except json.JSONDecodeError:
+            opt_overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp,
+                               microbatches=args.microbatches,
+                               seq_res=args.seq_res,
+                               overrides=overrides or None,
+                               opt_overrides=opt_overrides or None,
+                               grad_accum_dtype=args.grad_accum_dtype)
+                mesh_tag = "multi" if mp else "single"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_tag}__{args.tag}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "failed":
+                    failures += 1
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells FAILED")
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

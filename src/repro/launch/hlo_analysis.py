@@ -1,0 +1,398 @@
+"""Static HLO analysis for the roofline: loop-corrected FLOPs, bytes, collectives.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (verified on this
+backend: an 8-iteration scan reports 1/8 the unrolled FLOPs), which would
+drastically undercount scanned-layer models. This module parses the post-SPMD
+HLO text instead:
+
+  * builds the computation call graph (while bodies, fusions, to_apply),
+  * multiplies every instruction's cost by the product of enclosing
+    ``known_trip_count`` values,
+  * FLOPs from ``dot`` ops (2 x prod(output_shape) x contraction size); our
+    models lower all heavy math to dots,
+  * bytes from operand+output sizes at fusion boundaries (fusion internals are
+    free — the fusion op itself carries the HBM traffic),
+  * collective link-bytes per op kind with replica-group size:
+        all-gather          output_bytes            (ring, (g-1)/g ~= 1)
+        reduce-scatter      output_bytes x (g-1)
+        all-reduce          2 x output_bytes        (RS + AG)
+        all-to-all          output_bytes
+        collective-permute  output_bytes
+
+All sizes are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    is_entry: bool = False
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            name = mc.group(2)
+            cur = Computation(name=name, is_entry=bool(mc.group(1)))
+            comps[name] = cur
+            if mc.group(1):
+                entry = name
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi and cur is not None:
+            cur.instructions.append(Instruction(
+                name=mi.group(1), type_str=mi.group(2), op=mi.group(3),
+                line=line))
+    return comps, entry
+
+
+def _trip_count(line: str) -> int:
+    m = re.search(r'known_trip_count[":{ ]+n["\s:]+["\']?(\d+)', line)
+    return int(m.group(1)) if m else 1
+
+
+def _called_computations(line: str) -> List[Tuple[str, str]]:
+    """[(kind, comp_name)] referenced by this instruction."""
+    out = []
+    for kind in ("body", "condition", "calls", "to_apply", "branch_computations"):
+        for m in re.finditer(kind + r"=\{?([%\w\.\-, ]+)\}?", line):
+            for name in m.group(1).split(","):
+                name = name.strip()
+                if name.startswith("%"):
+                    out.append((kind, name))
+    return out
+
+
+def _replica_group_size(line: str) -> int:
+    # iota form: replica_groups=[num_groups,group_size]<=[...]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2,...},{...}}
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return 1
+
+
+def _dot_flops(inst: Instruction, shapes: Dict[str, str]) -> float:
+    out_elems = _shape_elems(inst.type_str)
+    # contraction size from lhs shape + lhs_contracting_dims
+    mo = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(inst.op):])
+    operands = []
+    if mo:
+        operands = [x.strip() for x in mo.group(1).split(",")]
+    mc = re.search(r"lhs_contracting_dims=\{([0-9, ]*)\}", inst.line)
+    k = 1
+    if mc and operands:
+        lhs = operands[0]
+        lhs_type = shapes.get(lhs, "")
+        ms = _SHAPE_RE.search(lhs_type)
+        if ms and ms.group(2):
+            dims = [int(d) for d in ms.group(2).split(",")]
+            for di in mc.group(1).split(","):
+                di = di.strip()
+                if di:
+                    idx = int(di)
+                    if idx < len(dims):
+                        k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "iota", "while", "conditional", "call",
+    "custom-call", "rng-bit-generator", "partition-id", "replica-id",
+}
+
+_SLICE_READ_OPS = {"dynamic-slice", "gather"}
+
+
+def _is_convert_only(comp: "Computation") -> bool:
+    """True for fusion computations that only convert dtypes (possibly with a
+    broadcast/reshape). The CPU backend has no native bf16 matmul, so it wraps
+    every dot in bf16->f32 converts; on the TPU target the MXU consumes bf16
+    with fp32 accumulation and these materializations don't exist. We charge
+    them zero bytes (documented CPU-lowering artifact)."""
+    real = [i for i in comp.instructions
+            if i.op not in ("parameter", "ROOT")]
+    ops = {i.op for i in real}
+    return bool(ops) and ops <= {"convert", "broadcast", "reshape", "copy",
+                                 "bitcast"}
+
+
+def _operands(inst: Instruction) -> List[str]:
+    mo = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(inst.op):])
+    if not mo:
+        return []
+    return [x.strip() for x in mo.group(1).split(",") if x.strip().startswith("%")]
+
+
+def _fusion_effective_bytes(fusion_inst: Instruction,
+                            comps: Dict[str, "Computation"],
+                            shapes: Dict[str, str]) -> float:
+    """HBM bytes for a fusion op, modeling slice/in-place semantics.
+
+    A fusion parameter that is only touched via dynamic-slice / gather is
+    charged those slices' output bytes (scan xs reads); a parameter that is the
+    in-place target of a dynamic-update-slice is charged the update bytes (scan
+    ys writes) — NOT the full loop-carried buffer. Everything else pays full
+    operand bytes, plus the fusion's output (with the root-DUS in-place
+    adjustment).
+    """
+    called = [c for k, c in _called_computations(fusion_inst.line)
+              if k == "calls"]
+    operands = _operands(fusion_inst)
+    comp = comps.get(called[0]) if called else None
+    if comp is None:
+        b = _shape_bytes(fusion_inst.type_str)
+        return b + sum(_shape_bytes(shapes.get(o, "")) for o in operands)
+    if _is_convert_only(comp):
+        return 0.0
+
+    # param name -> operand position; view chains (convert/bitcast/copy/
+    # reshape of a param) resolve back to the param.
+    params: Dict[str, int] = {}
+    local_shapes: Dict[str, str] = {}
+    view_of: Dict[str, str] = {}
+    _VIEW_OPS = {"convert", "bitcast", "bitcast-convert", "copy", "reshape"}
+    for inst in comp.instructions:
+        local_shapes[inst.name] = inst.type_str
+        if inst.op == "parameter":
+            mo = re.search(r"parameter\((\d+)\)", inst.line)
+            if mo:
+                params[inst.name] = int(mo.group(1))
+        elif inst.op in _VIEW_OPS:
+            ops = _operands(inst)
+            if len(ops) == 1:
+                view_of[inst.name] = ops[0]
+
+    def resolve(name: str) -> str:
+        seen = 0
+        while name in view_of and seen < 8:
+            name = view_of[name]
+            seen += 1
+        return name
+
+    full_use: Dict[int, bool] = {i: False for i in params.values()}
+    slice_bytes: Dict[int, float] = {i: 0.0 for i in params.values()}
+    dus_target: Dict[int, float] = {}
+    root_is_dus_on_param = False
+    for inst in comp.instructions:
+        if inst.op in _VIEW_OPS:
+            continue  # views are free; real uses charged at the consumer
+        ops = _operands(inst)
+        for pos, o in enumerate(ops):
+            o = resolve(o)
+            if o not in params:
+                continue
+            idx = params[o]
+            if inst.op in _SLICE_READ_OPS and pos == 0:
+                slice_bytes[idx] += _shape_bytes(inst.type_str)
+            elif inst.op == "dynamic-update-slice" and pos == 0:
+                upd = ops[1] if len(ops) > 1 else None
+                ub = _shape_bytes(local_shapes.get(upd, "")) if upd else 0
+                dus_target[idx] = dus_target.get(idx, 0.0) + ub
+                if "ROOT" in inst.line:
+                    root_is_dus_on_param = True
+            else:
+                full_use[idx] = True
+
+    total = 0.0
+    for name, idx in params.items():
+        opd = operands[idx] if idx < len(operands) else None
+        fullb = _shape_bytes(shapes.get(opd, "")) if opd else 0
+        if full_use[idx]:
+            total += fullb
+        else:
+            total += min(fullb, slice_bytes[idx] + dus_target.get(idx, 0.0))
+    out_b = _shape_bytes(fusion_inst.type_str)
+    if root_is_dus_on_param:
+        # in-place update: the write is the update slice, not the buffer
+        out_b = sum(dus_target.values())
+    return total + out_b
+
+
+@dataclass
+class HLOCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    dot_count: int = 0
+    while_loops: List[Tuple[str, int]] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(text: str) -> HLOCosts:
+    comps, entry = parse_module(text)
+    # module-wide shape table (instruction names are unique per computation;
+    # collisions across computations are rare and harmless for dot-K lookup)
+    shapes: Dict[str, str] = {}
+    for comp in comps.values():
+        for inst in comp.instructions:
+            shapes[inst.name] = inst.type_str
+        # parameters appear as instructions with op 'parameter' (already added)
+
+    # values that are dtype-converts of narrower values: charge the SOURCE
+    # bytes when read (the f32 materialization is a CPU-lowering artifact;
+    # the TPU MXU reads bf16 directly)
+    src_bytes: Dict[str, float] = {}
+    for comp in comps.values():
+        for inst in comp.instructions:
+            ops_ = _operands(inst)
+            if inst.op == "convert" and len(ops_) == 1:
+                src = ops_[0]
+                if src in shapes:
+                    src_bytes[inst.name] = min(_shape_bytes(shapes[src]),
+                                               _shape_bytes(inst.type_str))
+            elif inst.op == "fusion":
+                called = [c for k, c in _called_computations(inst.line)
+                          if k == "calls"]
+                fcomp = comps.get(called[0]) if called else None
+                if fcomp is not None and _is_convert_only(fcomp) and ops_:
+                    inb = sum(_shape_bytes(shapes.get(o, "")) for o in ops_)
+                    src_bytes[inst.name] = min(inb,
+                                               _shape_bytes(inst.type_str))
+
+    def eff_bytes(name: str) -> float:
+        if name in src_bytes:
+            return src_bytes[name]
+        return _shape_bytes(shapes.get(name, ""))
+
+    costs = HLOCosts()
+    # multipliers per computation via DFS from entry
+    mult: Dict[str, float] = {}
+
+    def visit(comp_name: str, m: float, in_fusion: bool):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        mult[comp_name] = mult.get(comp_name, 0.0) + m
+        for inst in comp.instructions:
+            calls = _called_computations(inst.line)
+            if inst.op == "while":
+                tc = _trip_count(inst.line)
+                costs.while_loops.append((inst.name, tc))
+                for kind, child in calls:
+                    visit(child, m * (tc if kind == "body" else 1), in_fusion)
+                continue
+            if inst.op == "fusion":
+                for _kind, child in calls:
+                    visit(child, m, True)  # fusion internals: flops yes, bytes no
+                continue
+            for _kind, child in calls:
+                visit(child, m, in_fusion)
+
+        for inst in comp.instructions:
+            if inst.op == "dot":
+                costs.flops += _dot_flops(inst, shapes) * m
+                costs.dot_count += 1
+            if inst.op in _COLLECTIVES or any(
+                    inst.op.startswith(c) for c in _COLLECTIVES):
+                opk = next(c for c in _COLLECTIVES if inst.op.startswith(c))
+                g = _replica_group_size(inst.line)
+                out_b = _shape_bytes(inst.type_str)
+                # CPU-backend dtype correction: collectives whose operands are
+                # f32 converts of bf16 values (the CPU bf16-matmul wrapper)
+                # would run at bf16 width on the TPU target.
+                ops_c = _operands(inst)
+                if ops_c:
+                    src_b = sum(src_bytes.get(o, _shape_bytes(shapes.get(o, "")))
+                                for o in ops_c)
+                    if 0 < src_b < out_b:
+                        out_b = src_b
+                if opk == "all-reduce":
+                    link = 2.0 * out_b * (g - 1) / max(1, g)
+                elif opk == "reduce-scatter":
+                    link = out_b * (g - 1)
+                elif opk == "all-gather":
+                    link = out_b * (g - 1) / max(1, g)
+                else:
+                    link = out_b * (g - 1) / max(1, g)
+                costs.collective_bytes[opk] = costs.collective_bytes.get(opk, 0.0) + link * m
+                costs.collective_count[opk] = costs.collective_count.get(opk, 0) + int(m)
+            if not in_fusion and inst.op not in _SKIP_BYTES_OPS:
+                if inst.op == "fusion":
+                    b = _fusion_effective_bytes(inst, comps, shapes)
+                elif inst.op in _SLICE_READ_OPS:
+                    b = 2.0 * _shape_bytes(inst.type_str)
+                elif inst.op == "dynamic-update-slice":
+                    ops_ = _operands(inst)
+                    ub = _shape_bytes(shapes.get(ops_[1], "")) if len(ops_) > 1 else 0
+                    b = 2.0 * ub
+                elif inst.op == "convert":
+                    b = 0.0  # CPU bf16-matmul artifact; fused on TPU
+                else:
+                    b = _shape_bytes(inst.type_str)
+                    for operand in _operands(inst):
+                        if operand in shapes:
+                            b += eff_bytes(operand)
+                costs.bytes_accessed += b * m
+
+    visit(entry, 1.0, False)
+    return costs

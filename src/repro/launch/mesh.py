@@ -1,0 +1,24 @@
+"""Production mesh definition (per assignment).
+
+Defined as a FUNCTION so importing this module never touches jax device state;
+the dry-run sets XLA_FLAGS for 512 host devices before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Single-device (or tiny) mesh for CPU smoke tests and examples."""
+    n = len(jax.devices())
+    data = max(1, n // model)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

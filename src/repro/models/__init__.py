@@ -1,0 +1,12 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_state_specs, decode_step, forward,
+                                init_decode_state, loss_fn, param_specs,
+                                prefill)
+from repro.models.common import (ParamSpec, abstract_params, init_params,
+                                 spec_tree_map)
+
+__all__ = [
+    "ModelConfig", "ParamSpec", "abstract_params", "init_params",
+    "spec_tree_map", "param_specs", "forward", "loss_fn", "prefill",
+    "decode_step", "decode_state_specs", "init_decode_state",
+]

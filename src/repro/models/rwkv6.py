@@ -1,0 +1,355 @@
+"""RWKV6 "Finch" — attention-free decoder with data-dependent decay.
+
+Time mixing: linear-attention-like recurrence per head (dh x dh state S):
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with data-dependent per-channel decay w_t = exp(-exp(w0 + lora_w(x_t))) and
+data-dependent token-shift interpolation (low-rank). Channel mixing: token-shift
++ squared-ReLU FFN.
+
+Training uses a chunked formulation (within-chunk decay-weighted attention +
+cross-chunk state scan) whose exponents are all <= 0 — numerically stable; the
+Pallas kernel (repro.kernels.wkv6) is the tuned TPU version and this module's
+per-step recurrence is its oracle. Decode carries O(1) state per layer, which is
+what makes long_500k runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm, with_logical_constraint
+from repro.models.config import ModelConfig
+
+
+def num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def layer_param_specs(cfg: ModelConfig, L: Optional[int] = None) -> Dict[str, ParamSpec]:
+    if L is None:
+        L = cfg.num_layers
+    D, F, r = cfg.d_model, cfg.d_ff, cfg.rwkv_lora_rank
+    H, dh = num_heads(cfg), cfg.rwkv_head_dim
+    return {
+        # -- time mixing ---------------------------------------------------
+        "tm_norm": ParamSpec((L, D), ("layers", "embed"), init="ones"),
+        "mu_base": ParamSpec((L, D), ("layers", "embed"), init="zeros"),
+        # data-dependent shift interpolation (5 targets: r,k,v,g,w)
+        "mix_w1": ParamSpec((L, D, 5 * r), ("layers", "embed", None)),
+        "mix_w2": ParamSpec((L, 5, r, D), ("layers", None, None, "embed")),
+        "mu_rkvgw": ParamSpec((L, 5, D), ("layers", None, "embed"), init="zeros"),
+        "w_r": ParamSpec((L, D, D), ("layers", "embed", None)),
+        "w_k": ParamSpec((L, D, D), ("layers", "embed", None)),
+        "w_v": ParamSpec((L, D, D), ("layers", "embed", None)),
+        "w_g": ParamSpec((L, D, D), ("layers", "embed", None)),
+        "w_o": ParamSpec((L, D, D), ("layers", None, "embed")),
+        # decay: w0 + tanh(x @ dw1) @ dw2
+        "w0": ParamSpec((L, D), ("layers", "embed"), init="zeros"),
+        "decay_w1": ParamSpec((L, D, r), ("layers", "embed", None)),
+        "decay_w2": ParamSpec((L, r, D), ("layers", None, "embed")),
+        "u": ParamSpec((L, H, dh), ("layers", None, None), init="zeros"),
+        "ln_x": ParamSpec((L, D), ("layers", "embed"), init="ones"),
+        # -- channel mixing -------------------------------------------------
+        "cm_norm": ParamSpec((L, D), ("layers", "embed"), init="ones"),
+        "cm_mu_k": ParamSpec((L, D), ("layers", "embed"), init="zeros"),
+        "cm_mu_r": ParamSpec((L, D), ("layers", "embed"), init="zeros"),
+        "cm_k": ParamSpec((L, D, F), ("layers", "embed", "mlp")),
+        "cm_v": ParamSpec((L, F, D), ("layers", "mlp", "embed")),
+        "cm_r": ParamSpec((L, D, D), ("layers", "embed", None)),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), init="embed",
+                           init_scale=0.02),
+        "layers": layer_param_specs(cfg),
+        "final_norm": ParamSpec((D,), ("embed",), init="ones"),
+        "unembed": ParamSpec((D, V), ("embed", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+
+def wkv6_chunked(r, k, v, w, u, chunk: int, state0=None):
+    """Chunked WKV6 over a full sequence.
+
+    r/k/v/w: (B, S, H, dh); u: (H, dh). Returns (y (B,S,H,dh), state (B,H,dh,dh)).
+    state[b,h,i,j] accumulates k_i v_j products.
+    """
+    B, S, H, dh = r.shape
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    T = r.shape[1]
+    n = T // chunk
+    # (n, B, H, C, dh)
+    resh = lambda x: x.reshape(B, n, chunk, H, dh).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+    lw = jnp.log(jnp.maximum(wc.astype(jnp.float32), 1e-12))      # (n,B,H,C,dh)
+    cw = jnp.cumsum(lw, axis=-2)                                   # inclusive
+    ecw = cw - lw                                                  # exclusive
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)           # s < t
+
+    def body(S0, xs):
+        rb, kb, vb, cwb, ecwb, ub = xs   # (B,H,C,dh) x5, (H,dh)
+        rf = rb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        # pairwise decay D[t,s,i] = exp(ecw[t,i] - cw[s,i]) for s < t (<= 0)
+        diff = ecwb[..., :, None, :] - cwb[..., None, :, :]        # (B,H,C,C,dh)
+        diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+        scores = jnp.einsum("bhti,bhsi,bhtsi->bhts", rf, kf, jnp.exp(diff))
+        diag = jnp.einsum("bhti,bhti,hi->bht", rf, kf, ub.astype(jnp.float32))
+        y_intra = jnp.einsum("bhts,bhsj->bhtj", scores, vf) \
+            + diag[..., None] * vf
+        # inter-chunk: y += (r_t * exp(ecw_t)) @ S0
+        rdec = rf * jnp.exp(ecwb)
+        y_inter = jnp.einsum("bhti,bhij->bhtj", rdec, S0)
+        y = y_intra + y_inter
+        # state update: S' = diag(exp(cw_C)) S0 + sum_s (k_s exp(cw_C - cw_s)) v_s^T
+        total = cwb[..., -1:, :]                                   # (B,H,1,dh)
+        kdec = kf * jnp.exp(total - cwb)
+        S1 = jnp.exp(total.squeeze(-2))[..., None] * S0 \
+            + jnp.einsum("bhsi,bhsj->bhij", kdec, vf)
+        return S1, y
+
+    u_b = jnp.broadcast_to(u.astype(jnp.float32), (n, *u.shape))
+    state, ys = jax.lax.scan(body, state0, (rc, kc, vc, cw, ecw, u_b))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, dh)[:, :S]
+    return y.astype(r.dtype), state
+
+
+def wkv6_step(r, k, v, w, u, state):
+    """Single-token recurrence (decode oracle). r/k/v/w: (B,H,dh); u: (H,dh);
+    state: (B,H,dh,dh). Returns (y (B,H,dh), new_state)."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = w.astype(jnp.float32)
+    kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+    y = jnp.einsum("bhi,bhij->bhj", rf, state + u[None, :, :, None] * kv)
+    new_state = wf[..., None] * state + kv
+    return y.astype(r.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """xx_t = x_{t-1}; x_{-1} = prev (or 0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix_inputs(cfg, lp, x, xx):
+    """Data-dependent token-shift interpolation -> (x_r, x_k, x_v, x_g, x_w)."""
+    cd = cfg.cdtype
+    r_rank = cfg.rwkv_lora_rank
+    dx = xx - x
+    base = x + dx * lp["mu_base"].astype(cd)
+    a = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, lp["mix_w1"].astype(cd)))
+    B, S = x.shape[:2]
+    a = a.reshape(B, S, 5, r_rank)
+    offs = jnp.einsum("bsfr,frd->bsfd", a, lp["mix_w2"].astype(cd))
+    mixed = x[:, :, None] + dx[:, :, None] * (
+        lp["mu_rkvgw"].astype(cd)[None, None] + offs)
+    return [mixed[:, :, i] for i in range(5)]
+
+
+def time_mix(cfg: ModelConfig, lp, h, shift_prev=None, state0=None,
+             return_state: bool = False):
+    """Full time-mixing block over a sequence. h: (B, S, D)."""
+    cd = cfg.cdtype
+    H, dh = num_heads(cfg), cfg.rwkv_head_dim
+    B, S, D = h.shape
+    x = rms_norm(h, lp["tm_norm"], cfg.norm_eps)
+    xx = _token_shift(x, shift_prev)
+    x_r, x_k, x_v, x_g, x_w = _mix_inputs(cfg, lp, x, xx)
+    r = jnp.einsum("bsd,de->bse", x_r, lp["w_r"].astype(cd))
+    k = jnp.einsum("bsd,de->bse", x_k, lp["w_k"].astype(cd))
+    v = jnp.einsum("bsd,de->bse", x_v, lp["w_v"].astype(cd))
+    g = jnp.einsum("bsd,de->bse", x_g, lp["w_g"].astype(cd))
+    dw = jnp.einsum("bsr,rd->bsd",
+                    jnp.tanh(jnp.einsum("bsd,dr->bsr", x_w,
+                                        lp["decay_w1"].astype(cd))),
+                    lp["decay_w2"].astype(cd))
+    wlog = -jnp.exp(jnp.clip(lp["w0"].astype(jnp.float32) +
+                             dw.astype(jnp.float32), -8.0, 4.0))
+    w = jnp.exp(wlog)  # per-channel decay in (0, 1)
+    shp = (B, S, H, dh)
+    r4, k4, v4, w4 = (t.reshape(shp) for t in (r, k, v, w.astype(cd)))
+    r4 = with_logical_constraint(r4, ("batch", "seq_sp", None, None))
+    y, state = wkv6_chunked(r4, k4, v4, w4, lp["u"], cfg.rwkv_chunk,
+                            state0=state0)
+    y = y.reshape(B, S, D)
+    y = rms_norm(y, lp["ln_x"], cfg.norm_eps)  # group-norm surrogate
+    out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(g), lp["w_o"].astype(cd))
+    if return_state:
+        return out, (x[:, -1], state)
+    return out
+
+
+def channel_mix(cfg: ModelConfig, lp, h, shift_prev=None,
+                return_state: bool = False):
+    cd = cfg.cdtype
+    x = rms_norm(h, lp["cm_norm"], cfg.norm_eps)
+    xx = _token_shift(x, shift_prev)
+    dx = xx - x
+    x_k = x + dx * lp["cm_mu_k"].astype(cd)
+    x_r = x + dx * lp["cm_mu_r"].astype(cd)
+    kk = jnp.einsum("bsd,df->bsf", x_k, lp["cm_k"].astype(cd))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = with_logical_constraint(kk, ("batch", None, "mlp"))
+    kv = jnp.einsum("bsf,fd->bsd", kk, lp["cm_v"].astype(cd))
+    out = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", x_r, lp["cm_r"].astype(cd))) * kv
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+def rwkv_layer(cfg: ModelConfig, lp, h):
+    h = h + time_mix(cfg, lp, h)
+    h = h + channel_mix(cfg, lp, h)
+    h = with_logical_constraint(h, ("batch", "seq_res", None))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Model-level entry points
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array,
+            frontend_embeds=None) -> Tuple[jax.Array, jax.Array]:
+    cd = cfg.cdtype
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    h = with_logical_constraint(h, ("batch", None, None))
+
+    def body(carry, lp):
+        return rwkv_layer(cfg, lp, carry), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(cd))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array):
+    """Forward over the prompt, returning (last-position logits, decode state).
+
+    The recurrent state is O(1) in sequence length — the reason this family
+    runs the long_500k cell.
+    """
+    cd = cfg.cdtype
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+
+    def body(carry, lp):
+        hh = carry
+        out, (tm_last, wkv_state) = time_mix(cfg, lp, hh, return_state=True)
+        hh = hh + out
+        out2, cm_last = channel_mix(cfg, lp, hh, return_state=True)
+        hh = hh + out2
+        return hh, (wkv_state, tm_last, cm_last)
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, (wkv_s, tm_s, cm_s) = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(cd))[:, 0]
+    return logits, {"wkv": wkv_s, "tm_shift": tm_s, "cm_shift": cm_s}
+
+
+def init_state_specs(cfg: ModelConfig, batch: int):
+    """Recurrent decode state: O(1) in sequence length."""
+    L, D = cfg.num_layers, cfg.d_model
+    H, dh = num_heads(cfg), cfg.rwkv_head_dim
+    f32 = jnp.float32
+    return {
+        "wkv": (jax.ShapeDtypeStruct((L, batch, H, dh, dh), f32),
+                ("layers", "batch", None, None, None)),
+        "tm_shift": (jax.ShapeDtypeStruct((L, batch, D), cfg.cdtype),
+                     ("layers", "batch", "embed")),
+        "cm_shift": (jax.ShapeDtypeStruct((L, batch, D), cfg.cdtype),
+                     ("layers", "batch", "embed")),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    return {k: jnp.zeros(s.shape, s.dtype)
+            for k, (s, _a) in init_state_specs(cfg, batch).items()}
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens: jax.Array,
+                pos: jax.Array):
+    """One-token decode with recurrent state. tokens: (B,)."""
+    cd = cfg.cdtype
+    H, dh = num_heads(cfg), cfg.rwkv_head_dim
+    h = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cd)  # (B,1,D)
+
+    def body(carry, xs):
+        hh = carry
+        lp, wkv_s, tm_s, cm_s = xs
+        # time mix (S=1 path with explicit shift/state)
+        x = rms_norm(hh, lp["tm_norm"], cfg.norm_eps)
+        xx = tm_s[:, None]
+        x_r, x_k, x_v, x_g, x_w = _mix_inputs(cfg, lp, x, xx)
+        r = jnp.einsum("bsd,de->bse", x_r, lp["w_r"].astype(cd))[:, 0]
+        k = jnp.einsum("bsd,de->bse", x_k, lp["w_k"].astype(cd))[:, 0]
+        v = jnp.einsum("bsd,de->bse", x_v, lp["w_v"].astype(cd))[:, 0]
+        g = jnp.einsum("bsd,de->bse", x_g, lp["w_g"].astype(cd))[:, 0]
+        dw = jnp.einsum("bsr,rd->bsd",
+                        jnp.tanh(jnp.einsum("bsd,dr->bsr", x_w,
+                                            lp["decay_w1"].astype(cd))),
+                        lp["decay_w2"].astype(cd))[:, 0]
+        wlog = -jnp.exp(jnp.clip(lp["w0"].astype(jnp.float32) +
+                                 dw.astype(jnp.float32), -8.0, 4.0))
+        w = jnp.exp(wlog)
+        B = hh.shape[0]
+        shp = (B, H, dh)
+        y, wkv_new = wkv6_step(r.reshape(shp), k.reshape(shp), v.reshape(shp),
+                               w.reshape(shp).astype(jnp.float32),
+                               lp["u"].astype(jnp.float32), wkv_s)
+        y = rms_norm(y.reshape(B, cfg.d_model), lp["ln_x"], cfg.norm_eps)
+        out = jnp.einsum("bd,de->be", y * jax.nn.silu(g), lp["w_o"].astype(cd))
+        hh = hh + out[:, None]
+        tm_new = x[:, -1]
+        # channel mix
+        x = rms_norm(hh, lp["cm_norm"], cfg.norm_eps)
+        xx = cm_s[:, None]
+        dx = xx - x
+        x_k2 = x + dx * lp["cm_mu_k"].astype(cd)
+        x_r2 = x + dx * lp["cm_mu_r"].astype(cd)
+        kk = jnp.square(jax.nn.relu(
+            jnp.einsum("bsd,df->bsf", x_k2, lp["cm_k"].astype(cd))))
+        kv = jnp.einsum("bsf,fd->bsd", kk, lp["cm_v"].astype(cd))
+        out2 = jax.nn.sigmoid(
+            jnp.einsum("bsd,de->bse", x_r2, lp["cm_r"].astype(cd))) * kv
+        hh = hh + out2
+        cm_new = x[:, -1]
+        return hh, (wkv_new, tm_new, cm_new)
+
+    h, (wkv_new, tm_new, cm_new) = jax.lax.scan(
+        body, h, (params["layers"], state["wkv"], state["tm_shift"],
+                  state["cm_shift"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(cd))[:, 0]
+    return logits, {"wkv": wkv_new, "tm_shift": tm_new, "cm_shift": cm_new}

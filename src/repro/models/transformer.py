@@ -1,0 +1,356 @@
+"""Dense decoder-only transformer (GQA + SwiGLU), scanned over layers.
+
+Covers families: dense, moe (FFN swapped for repro.models.moe), vlm and audio
+(backbone identical; modality frontends enter as precomputed embeddings).
+
+Weights keep explicit head axes — (D, H, dh) etc. — so TP sharding of the head
+dim never crosses head boundaries; when H is not divisible by the TP size the
+sharding rules fall back to sequence-parallel attention activations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ParamSpec, apply_rope, attention,
+                                 cache_update, decode_attention,
+                                 decode_attention_readonly, rms_norm,
+                                 rope_angles, swiglu, with_logical_constraint)
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_ffn, moe_param_specs
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def layer_param_specs(cfg: ModelConfig, L: Optional[int] = None) -> Dict[str, ParamSpec]:
+    """Specs for a stack of L transformer layers (leading 'layers' axis)."""
+    if L is None:
+        L = cfg.num_layers
+    D, H, G, dh, F = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.head_dim, cfg.d_ff)
+    specs: Dict[str, ParamSpec] = {
+        "attn_norm": ParamSpec((L, D), ("layers", "embed"), init="ones"),
+        "wq": ParamSpec((L, D, H, dh), ("layers", "embed", "heads", None)),
+        "wk": ParamSpec((L, D, G, dh), ("layers", "embed", "kv", None)),
+        "wv": ParamSpec((L, D, G, dh), ("layers", "embed", "kv", None)),
+        "wo": ParamSpec((L, H, dh, D), ("layers", "heads", None, "embed")),
+        "mlp_norm": ParamSpec((L, D), ("layers", "embed"), init="ones"),
+    }
+    if cfg.qkv_bias:
+        specs.update({
+            "bq": ParamSpec((L, H, dh), ("layers", "heads", None), init="zeros"),
+            "bk": ParamSpec((L, G, dh), ("layers", "kv", None), init="zeros"),
+            "bv": ParamSpec((L, G, dh), ("layers", "kv", None), init="zeros"),
+        })
+    if cfg.family == "moe":
+        specs.update(moe_param_specs(cfg, L))
+    else:
+        specs.update({
+            "w_gate": ParamSpec((L, D, F), ("layers", "embed", "mlp")),
+            "w_up": ParamSpec((L, D, F), ("layers", "embed", "mlp")),
+            "w_down": ParamSpec((L, F, D), ("layers", "mlp", "embed")),
+        })
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    if cfg.family == "audio":
+        embed = ParamSpec((cfg.num_codebooks, V, D), (None, "vocab", "embed"),
+                          init="embed", init_scale=0.02)
+        unembed = ParamSpec((cfg.num_codebooks, D, V), (None, "embed", "vocab"))
+    else:
+        embed = ParamSpec((V, D), ("vocab", "embed"), init="embed",
+                          init_scale=0.02)
+        unembed = ParamSpec((D, V), ("embed", "vocab"))
+    specs = {
+        "embed": embed,
+        "layers": layer_param_specs(cfg),
+        "final_norm": ParamSpec((D,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = unembed
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(cfg: ModelConfig, params, tokens: jax.Array) -> jax.Array:
+    cd = cfg.cdtype
+    if cfg.family == "audio":
+        # tokens: (B, S, K); sum the K codebook embeddings
+        parts = [jnp.take(params["embed"][k], tokens[..., k], axis=0)
+                 for k in range(cfg.num_codebooks)]
+        return sum(parts).astype(cd)
+    return jnp.take(params["embed"], tokens, axis=0).astype(cd)
+
+
+def _unembed(cfg: ModelConfig, params, h: jax.Array) -> jax.Array:
+    cd = cfg.cdtype
+    if cfg.family == "audio":
+        return jnp.einsum("bsd,kdv->bskv", h, params["unembed"].astype(cd))
+    table = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", h, table.astype(cd))
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def attn_block(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+               cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, D) normed input -> attention output (B, S, D)."""
+    cd = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = with_logical_constraint(q, ("batch", "seq_sp", "heads", None))
+    k = with_logical_constraint(k, ("batch", None, "kv", None))
+    v = with_logical_constraint(v, ("batch", None, "kv", None))
+    out = attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                    chunk=cfg.attention_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def dense_ffn(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    cd = cfg.cdtype
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cd))
+    mid = swiglu(g, u)
+    mid = with_logical_constraint(mid, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", mid, p["w_down"].astype(cd))
+
+
+def decoder_layer(cfg: ModelConfig, lp: Dict[str, jax.Array], h: jax.Array,
+                  cos: jax.Array, sin: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One pre-norm residual layer. Returns (h, aux_loss)."""
+    x = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    h = h + attn_block(cfg, lp, x, cos, sin)
+    x = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_ffn(cfg, lp, x)
+    else:
+        y, aux = dense_ffn(cfg, lp, x), jnp.zeros((), jnp.float32)
+    h = h + y
+    h = with_logical_constraint(h, ("batch", "seq_res", None))
+    return h, aux
+
+
+def _scan_layers(cfg: ModelConfig, layer_params, h, cos, sin):
+    """Scan h through the stacked layer params (with optional full remat)."""
+
+    def body(carry, lp):
+        new_h, aux = decoder_layer(cfg, lp, carry, cos, sin)
+        return new_h, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        h, auxs = jax.lax.scan(body, h, layer_params)
+        return h, jnp.sum(auxs)
+    L = jax.tree_util.tree_leaves(layer_params)[0].shape[0]
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(L):
+        lp = jax.tree_util.tree_map(lambda a: a[i], layer_params)
+        h, aux = body(h, lp)
+        aux_total = aux_total + aux
+    return h, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array,
+            frontend_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training/eval forward pass. Returns (logits, aux_loss).
+
+    tokens: (B, S) int32 — or (B, S, K) for audio. frontend_embeds: (B, P, D)
+    precomputed modality embeddings prepended to the token embeddings.
+    """
+    h = _embed_tokens(cfg, params, tokens)
+    if frontend_embeds is not None:
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    B, S = h.shape[:2]
+    h = with_logical_constraint(h, ("batch", None, None))
+    cos, sin = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]  # (1, S, dh/2)
+    h, aux = _scan_layers(cfg, params["layers"], h, cos, sin)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, h)
+    return logits, aux
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract KV-cache structure for AOT lowering: (L, B, T, G, dh) x2.
+
+    Logical axes: cache sequence dim shards over "model" (flash-decode style);
+    batch over ("pod","data").
+    """
+    L, G, dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    shape = (L, batch, max_seq, G, dh)
+    axes = ("layers", "batch", "cache_seq", "kv", None)
+    return {
+        "k": (jax.ShapeDtypeStruct(shape, cfg.cdtype), axes),
+        "v": (jax.ShapeDtypeStruct(shape, cfg.cdtype), axes),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    specs = init_cache_specs(cfg, batch, max_seq)
+    return {k: jnp.zeros(s.shape, s.dtype) for k, (s, _a) in specs.items()}
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array,
+            frontend_embeds: Optional[jax.Array] = None):
+    """Forward pass that also materializes the KV cache. Returns
+    (logits_last, cache) — cache shaped (L, B, S, G, dh)."""
+    h = _embed_tokens(cfg, params, tokens)
+    if frontend_embeds is not None:
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    B, S = h.shape[:2]
+    cos, sin = rope_angles(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]
+    cd = cfg.cdtype
+
+    def body(carry, lp):
+        hh = carry
+        x = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(cd))
+        k = jnp.einsum("bsd,dgk->bsgk", x, lp["wk"].astype(cd))
+        v = jnp.einsum("bsd,dgk->bsgk", x, lp["wv"].astype(cd))
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cd)
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        q = with_logical_constraint(q, ("batch", "seq_sp", "heads", None))
+        # pin attention-side k/v shardings so the cache_seq constraint below
+        # does not back-propagate (would force an involuntary all-gather)
+        k = with_logical_constraint(k, ("batch", None, "kv", None))
+        v = with_logical_constraint(v, ("batch", None, "kv", None))
+        out = attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                        chunk=cfg.attention_chunk)
+        hh = hh + jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(cd))
+        x = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _aux = moe_ffn(cfg, lp, x)
+        else:
+            y = dense_ffn(cfg, lp, x)
+        hh = hh + y
+        kc = with_logical_constraint(k, ("batch", "cache_seq", "kv", None))
+        vc = with_logical_constraint(v, ("batch", "cache_seq", "kv", None))
+        return hh, (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, (k_cache, v_cache) = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, h[:, -1:])[:, 0]  # (B, V) / (B, K, V)
+    return logits, {"k": k_cache, "v": v_cache}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                pos: jax.Array):
+    """One-token decode against the KV cache.
+
+    tokens: (B,) int32 (or (B, K) audio); pos: scalar int32 — current position.
+    Returns (logits, new_cache).
+    """
+    if cfg.family == "audio":
+        tok = tokens[:, None, :]  # (B, 1, K)
+    else:
+        tok = tokens[:, None]     # (B, 1)
+    h = _embed_tokens(cfg, params, tok)  # (B, 1, D)
+    cd = cfg.cdtype
+    cos, sin = rope_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+    cos, sin = cos[None], sin[None]  # (1, 1, dh/2)
+
+    def body(carry, xs):
+        hh = carry
+        lp, kc, vc = xs
+        x = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(cd))
+        k = jnp.einsum("bsd,dgk->bsgk", x, lp["wk"].astype(cd))
+        v = jnp.einsum("bsd,dgk->bsgk", x, lp["wv"].astype(cd))
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cd)
+            k = k + lp["bk"].astype(cd)
+            v = v + lp["bv"].astype(cd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        kc = cache_update(kc, k, pos)
+        vc = cache_update(vc, v, pos)
+        out = decode_attention(q[:, 0], kc, vc, pos)[:, None]
+        hh = hh + jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(cd))
+        x = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _aux = moe_ffn(cfg, lp, x)
+        else:
+            y = dense_ffn(cfg, lp, x)
+        return hh + y, (kc, vc)
+
+    if cfg.decode_cache_mode == "scan_carry":
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new}
+    else:
+        # "readonly_fused" (§Perf): the scan-carried cache is double-buffered
+        # by XLA (xs in + ys out ~= 2x cache in temp). Instead the scan READS
+        # the cache (xs) and emits only each layer's new (B, 1, G, dh) KV as
+        # ys; attention combines the stale cache (masked < pos) with the new
+        # token analytically; ONE fused elementwise select then writes all
+        # layers' updates — aliasable with the donated input buffer.
+        def body_ro(carry, xs):
+            hh = carry
+            lp, kc, vc = xs
+            x = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(cd))
+            k = jnp.einsum("bsd,dgk->bsgk", x, lp["wk"].astype(cd))
+            v = jnp.einsum("bsd,dgk->bsgk", x, lp["wv"].astype(cd))
+            if cfg.qkv_bias:
+                q = q + lp["bq"].astype(cd)
+                k = k + lp["bk"].astype(cd)
+                v = v + lp["bv"].astype(cd)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+            out = decode_attention_readonly(q[:, 0], kc, vc, k[:, 0], v[:, 0],
+                                            pos)[:, None]
+            hh = hh + jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(cd))
+            x = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _aux = moe_ffn(cfg, lp, x)
+            else:
+                y = dense_ffn(cfg, lp, x)
+            return hh + y, (k[:, 0], v[:, 0])
+
+        h, (k_upd, v_upd) = jax.lax.scan(
+            body_ro, h, (params["layers"], cache["k"], cache["v"]))
+        T = cache["k"].shape[2]
+        hit = (jnp.arange(T) == pos)[None, None, :, None, None]
+        new_cache = {
+            "k": jnp.where(hit, k_upd[:, :, None].astype(cache["k"].dtype),
+                           cache["k"]),
+            "v": jnp.where(hit, v_upd[:, :, None].astype(cache["v"].dtype),
+                           cache["v"]),
+        }
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(cfg, params, h)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,117 @@
+"""Batched serving engine: prefill + KV-cache decode over a request queue.
+
+A deliberately compact production shape: fixed decode batch, greedy or
+temperature sampling, per-slot request lifecycle (free -> prefilling ->
+decoding -> done). Prompts can be pulled from a BatchWeave namespace (the
+inference side of the data plane) or submitted directly.
+
+On a pod this runs under the same mesh/sharding rules as the dry-run's
+decode cells (KV cache sequence-sharded over "model"); on CPU it serves the
+smoke-scale configs in the examples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (ModelConfig, decode_step, init_decode_state,
+                          prefill)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    wall_prefill_s: float = 0.0
+    wall_decode_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / max(1e-9, self.wall_decode_s)
+
+
+class ServeEngine:
+    """Static-batch engine: requests of equal prompt length are prefilled as a
+    batch, then decoded together until every slot finishes."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        if cfg.family not in ("dense", "moe", "vlm", "audio"):
+            raise ValueError("ServeEngine currently targets KV-cache families; "
+                             "use decode_step directly for SSM/hybrid")
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self.stats = EngineStats()
+        self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1).astype(jnp.int32)
+
+    def run_batch(self, requests: List[Request],
+                  eos_id: Optional[int] = None) -> List[Request]:
+        assert len({len(r.prompt) for r in requests}) == 1, \
+            "static batch: equal prompt lengths (pad upstream)"
+        B = len(requests)
+        P = len(requests[0].prompt)
+        prompts = jnp.asarray(np.stack([r.prompt for r in requests]))
+
+        t0 = time.monotonic()
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        pad = self.max_seq - cache["k"].shape[2]
+        if pad > 0:
+            cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                     for k, v in cache.items()}
+        jax.block_until_ready(logits)
+        self.stats.prefills += 1
+        self.stats.wall_prefill_s += time.monotonic() - t0
+
+        tok = self._sample(logits)
+        live = np.ones(B, bool)
+        t0 = time.monotonic()
+        max_new = max(r.max_new_tokens for r in requests)
+        for i in range(max_new):
+            tok_np = np.asarray(tok)
+            for b, r in enumerate(requests):
+                if live[b] and len(r.generated) < r.max_new_tokens:
+                    t = int(tok_np[b])
+                    r.generated.append(t)
+                    if (eos_id is not None and t == eos_id) or \
+                            len(r.generated) >= r.max_new_tokens:
+                        r.done = True
+                        live[b] = False
+                    self.stats.tokens_out += 1
+            if not live.any() or P + i + 1 >= self.max_seq:
+                break
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(P + i))
+            tok = self._sample(logits)
+            self.stats.decode_steps += 1
+        jax.block_until_ready(tok)
+        self.stats.wall_decode_s += time.monotonic() - t0
+        for r in requests:
+            r.done = True
+        return requests

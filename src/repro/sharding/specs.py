@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules over the production mesh (pod, data, model).
+
+Physical strategy (MaxText-style 2D/3D sharding):
+
+  * batch                 -> ("pod", "data")          pure DP
+  * weight "embed" dims   -> ("pod", "data")          FSDP (ZeRO-3): weights and
+                                                      optimizer state fully
+                                                      sharded; all-gathered
+                                                      per-layer inside the scan
+  * "heads"/"kv"/"mlp"/"vocab"/"experts" -> "model"   TP / EP
+  * "seq_sp"              -> "model"                  sequence-parallel
+                                                      activation constraint
+                                                      (only when heads are not
+                                                      TP-shardable: 40H, 24H)
+  * "cache_seq"           -> "model"                  decode KV caches shard the
+                                                      sequence dim (flash-decode
+                                                      style all-reduce softmax)
+
+Every mapping entry degrades to ``None`` (replicated) when the dimension is not
+divisible by the mesh axis size — jit in_shardings require divisibility.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Physical = Optional[Tuple[str, ...]]
+
+_current_rules: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_rules", default=None)
+
+
+def current_rules() -> Optional["ShardingRules"]:
+    return _current_rules.get()
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    mapping: Dict[str, Physical]
+    constrain_activations: bool = True
+
+    def axis_size(self, axes: Physical) -> int:
+        if not axes:
+            return 1
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> PartitionSpec:
+        """PartitionSpec for the given logical axes; if ``shape`` is given,
+        non-divisible dims degrade to replicated."""
+        entries = []
+        used: set = set()
+        for i, ax in enumerate(logical_axes):
+            phys = self.mapping.get(ax) if ax is not None else None
+            if phys:
+                # an axis name may appear only once in a PartitionSpec
+                phys = tuple(p for p in phys if p not in used)
+            if not phys:
+                entries.append(None)
+                continue
+            if shape is not None:
+                n = 1
+                for p in phys:
+                    n *= self.mesh.shape[p]
+                if shape[i] % n != 0:
+                    entries.append(None)
+                    continue
+            used.update(phys)
+            entries.append(phys if len(phys) > 1 else phys[0])
+        while entries and entries[-1] is None:
+            entries.pop()
+        return PartitionSpec(*entries)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+    def constrain(self, x: jax.Array, logical_axes: Sequence[Optional[str]]):
+        if not self.constrain_activations:
+            return x
+        try:
+            spec = self.spec(logical_axes, shape=x.shape)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+        except Exception:
+            return x
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(mesh: Mesh, num_heads: int, num_kv_heads: int,
+               seq_parallel: bool = True,
+               fsdp: bool = True,
+               experts_ep: bool = True) -> ShardingRules:
+    """Build the logical->physical mapping for one architecture on one mesh."""
+    dax = data_axes(mesh)
+    model = ("model",) if "model" in mesh.axis_names else None
+    msize = mesh.shape["model"] if model else 1
+    heads_tp = model if (model and num_heads % msize == 0) else None
+    kv_tp = model if (model and num_kv_heads % msize == 0) else None
+    mapping: Dict[str, Physical] = {
+        "batch": dax or None,
+        "embed": dax if fsdp else None,
+        "heads": heads_tp,
+        "kv": kv_tp,
+        "mlp": model,
+        "vocab": model,
+        "experts": model if experts_ep else None,
+        "layers": None,
+        "state": None,
+        "cache_seq": model,
+        # sequence-parallel q when heads cannot be TP-sharded; otherwise the
+        # head dim carries TP and seq stays unsharded.
+        "seq_sp": model if (seq_parallel and heads_tp is None) else None,
+        # residual-stream sequence sharding (classic SP) — opt-in knob used by
+        # perf iterations; default off to keep baseline faithful.
+        "seq_res": None,
+    }
+    return ShardingRules(mesh=mesh, mapping=mapping)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    token = _current_rules.set(rules)
+    try:
+        yield rules
+    finally:
+        _current_rules.reset(token)
+
+
+def param_shardings(rules: ShardingRules, specs):
+    """NamedSharding tree for a ParamSpec tree."""
+    from repro.models.common import spec_tree_map
+    return spec_tree_map(
+        lambda s: rules.sharding(s.logical_axes, s.shape), specs)

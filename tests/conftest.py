@@ -1,0 +1,20 @@
+import os
+
+# Smoke tests and benches must see the real (single) CPU device — the 512-way
+# host-device override belongs ONLY to repro.launch.dryrun.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run XLA_FLAGS globally"
+
+import pytest
+
+from repro.core import MemoryObjectStore, Namespace
+
+
+@pytest.fixture
+def store():
+    return MemoryObjectStore()
+
+
+@pytest.fixture
+def ns(store):
+    return Namespace(store, "runs/test")

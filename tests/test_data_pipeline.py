@@ -1,0 +1,113 @@
+"""Data substrate: packer conservation, deterministic preprocessing, baselines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (BrokerConfig, ColocatedConfig, ColocatedPipeline,
+                        GlobalBatchPacker, KafkaSimBroker, KafkaTGBConsumer,
+                        KafkaTGBProducer, MessageTooLarge, PreprocessConfig,
+                        SyntheticSource, decode_slice, expansion_table,
+                        preprocess)
+from repro.core.tgb import build_uniform_tgb
+
+
+@settings(max_examples=30, deadline=None)
+@given(gb=st.sampled_from([2, 4, 8]), seq=st.sampled_from([8, 16]),
+       dp=st.sampled_from([1, 2, 4]), cp=st.sampled_from([1, 2]),
+       chunks=st.lists(st.integers(1, 200), min_size=1, max_size=30))
+def test_packer_conserves_token_stream(gb, seq, dp, cp, chunks):
+    """Property: concatenating emitted batches reproduces the input stream."""
+    if gb % dp or seq % cp:
+        return
+    packer = GlobalBatchPacker(gb, seq, dp, cp)
+    stream = []
+    out_batches = []
+    next_tok = 0
+    for n in chunks:
+        toks = np.arange(next_tok, next_tok + n, dtype=np.int32)
+        next_tok += n
+        stream.append(toks)
+        out_batches.extend(packer.add_tokens(toks))
+    stream_flat = np.concatenate(stream)
+    consumed = 0
+    for b in out_batches:
+        grid = np.zeros((gb, seq), np.int32)
+        bs, cs = gb // dp, seq // cp
+        for (d, c), payload in b.slices.items():
+            grid[d * bs:(d + 1) * bs, c * cs:(c + 1) * cs] = \
+                decode_slice(payload, bs, cs)
+        np.testing.assert_array_equal(
+            grid.ravel(), stream_flat[consumed:consumed + gb * seq])
+        consumed += gb * seq
+
+
+def test_preprocess_deterministic_replay():
+    src = SyntheticSource(seed=3)
+    cfg = PreprocessConfig(resolution=448, observation_history=2)
+    a = preprocess(src.record(17), cfg, seed=3)
+    b = preprocess(src.record(17), cfg, seed=3)
+    assert a.payload == b.payload and a.tokens == b.tokens
+
+
+def test_expansion_grows_with_resolution_and_history():
+    rows = expansion_table(kinds=("video",), resolutions=(224, 640),
+                           histories=(1, 4), n=8)
+    by = {(r["resolution"], r["history"]): r["expansion_mean"] for r in rows}
+    assert by[(640, 1)] > by[(224, 1)]
+    assert by[(640, 4)] > by[(640, 1)]
+    # paper Fig. 1 magnitude: hundreds-to-thousands x at max config
+    assert by[(640, 4)] > 100
+
+
+def test_kafka_strict_tgb_size_limit():
+    br = KafkaSimBroker(BrokerConfig(max_message_bytes=10_000))
+    p = KafkaTGBProducer(br)
+    assert p.publish_tgb(build_uniform_tgb("a", 2, 1, "p", 0, 1000)) is not None
+    assert p.publish_tgb(build_uniform_tgb("b", 2, 1, "p", 1, 100_000)) is None
+    assert br.stats.append_failures_size == 1
+
+
+def test_kafka_consumer_read_amplification_is_world_size():
+    br = KafkaSimBroker()
+    p = KafkaTGBProducer(br)
+    for i in range(3):
+        p.publish_tgb(build_uniform_tgb(f"t{i}", 4, 1, "p", i, 50_000))
+    c = KafkaTGBConsumer(br, d=0, c=0, dp=4, cp=1)
+    for _ in range(3):
+        c.next_batch(1.0)
+    assert c.read_amplification > 3.5  # ~D = 4
+
+
+def test_kafka_ordering_is_total():
+    br = KafkaSimBroker()
+    p = KafkaTGBProducer(br)
+    blobs = [build_uniform_tgb(f"t{i}", 1, 1, "p", i, 100) for i in range(5)]
+    for b in blobs:
+        p.publish_tgb(b)
+    assert [br.fetch(i) for i in range(5)] == blobs
+
+
+def test_colocated_crash_stalls_training():
+    cp = ColocatedPipeline(
+        ColocatedConfig(workers=2, node_cpu=8, train_cpu=2,
+                        trainer_ranks_per_node=1, queue_depth=2),
+        preprocess_cost_s=lambda i: 0.001, batch_cpu_items=2)
+    cp.start()
+    tr1 = cp.run_training(steps=3, gpu_step_s=0.001)
+    assert len(tr1.latencies) == 3
+    cp.inject_crash()
+    tr2 = cp.run_training(steps=3, gpu_step_s=0.001, stall_timeout_s=0.2)
+    cp.stop()
+    assert len(tr2.latencies) < 3  # the job stalled: no failure isolation
+
+
+def test_colocated_contention_slows_steps():
+    fast = ColocatedPipeline(
+        ColocatedConfig(workers=1, node_cpu=64, train_cpu=1,
+                        trainer_ranks_per_node=1),
+        preprocess_cost_s=lambda i: 0.0005, batch_cpu_items=1)
+    slow = ColocatedPipeline(
+        ColocatedConfig(workers=12, node_cpu=8, train_cpu=4,
+                        trainer_ranks_per_node=8),
+        preprocess_cost_s=lambda i: 0.0005, batch_cpu_items=1)
+    assert slow._slowdown() > fast._slowdown() >= 1.0

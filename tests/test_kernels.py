@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.wkv6 import wkv6_fwd
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def _tol(dtype):
+    return dict(atol=4e-2, rtol=4e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,G,dh,causal", [
+    (2, 128, 4, 2, 64, True),
+    (1, 256, 8, 8, 32, True),
+    (2, 64, 4, 1, 128, True),
+    (1, 128, 6, 3, 64, False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, G, dh, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, G, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, G, dh), dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=64, block_k=64,
+                              interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **_tol(dtype))
+
+
+def test_flash_attention_gradients_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(flash_attention_ref(q, k, v, True) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,G,dh,T,cur", [
+    (2, 8, 2, 64, 256, 0),
+    (2, 8, 2, 64, 256, 100),
+    (1, 4, 4, 128, 512, 511),
+    (3, 6, 3, 32, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, G, dh, T, cur, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    kc = jax.random.normal(ks[1], (B, T, G, dh), dtype)
+    vc = jax.random.normal(ks[2], (B, T, G, dh), dtype)
+    out = decode_attention_fwd(q, kc, vc, cur, block_k=64, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, cur)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (3, 7, 256), (2, 37, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], (shape[-1],), jnp.float32)
+    out = rmsnorm_fwd(x, w, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                    **_tol(dtype))
+
+
+def test_rmsnorm_gradient():
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 64), jnp.float32)
+    w = jnp.ones((64,))
+    gk = jax.grad(lambda x_: jnp.sum(rmsnorm(x_, w) ** 2))(x)
+    gr = jax.grad(lambda x_: jnp.sum(rmsnorm_ref(x_, w) ** 2))(x)
+    assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,dh,chunk", [
+    (2, 45, 3, 16, 16),
+    (1, 64, 2, 32, 32),
+    (2, 17, 4, 8, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_sweep(B, S, H, dh, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    r = (jax.random.normal(ks[0], (B, S, H, dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, dh)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, H, dh)) * 0.5).astype(dtype)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, dh)) * 0.5)
+                ).astype(jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(6), (H, dh)) * 0.3
+    y, s = wkv6_fwd(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, sr = wkv6_ref(r, k, v, w, u)
+    tol = dict(atol=6e-2, rtol=6e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+    assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                    **tol)
+    assert_allclose(np.asarray(s), np.asarray(sr), atol=2e-4, rtol=2e-4)
