@@ -1,0 +1,23 @@
+PYTHON ?= python
+# src for the repro package, . for the benchmarks package
+export PYTHONPATH := src:.:$(PYTHONPATH)
+
+.PHONY: test test-fast bench-smoke bench-full examples
+
+test:
+	$(PYTHON) -m pytest -q
+
+test-fast:
+	$(PYTHON) -m pytest -q -x tests/test_dataplane.py tests/test_tgb.py \
+		tests/test_consumer.py tests/test_manifest_commit.py tests/test_dac.py
+
+bench-smoke:
+	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10
+
+bench-full:
+	$(PYTHON) benchmarks/run.py --full
+
+examples:
+	$(PYTHON) examples/quickstart.py
+	$(PYTHON) examples/failover.py
+	$(PYTHON) examples/train_e2e.py --steps 20 --ckpt-every 10

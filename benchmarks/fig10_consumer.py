@@ -1,7 +1,8 @@
 """Fig. 10 — consumer efficiency: per-rank throughput, P50/P95 read latency,
 read amplification, across world size x payload: BatchWeave range reads vs
 dense-read vs Kafka record fetch. All strategies read identical
-pre-materialized committed datasets (paper methodology)."""
+pre-materialized committed datasets (paper methodology), and all run through
+the unified ``repro.dataplane`` facade."""
 from __future__ import annotations
 
 import time
@@ -9,37 +10,33 @@ from typing import List
 
 from benchmarks.common import (Row, bench_broker, bench_clock, bench_store,
                                percentile, run_threads)
-from repro.core import (Consumer, ManifestStore, MeshPosition, Namespace,
-                        Producer)
-from repro.core.tgb import build_uniform_tgb
-from repro.data.mq import KafkaTGBConsumer, KafkaTGBProducer
+from repro.dataplane import Topology, open_dataplane
 
 N_TGBS = 12
 
 
 def _materialize(clock, world: int, payload: int):
-    store = bench_store(clock)
-    ns = Namespace(store, "runs/fig10")
-    p = Producer(ns, "p0", dp=world, cp=1, manifests=ManifestStore(ns))
-    for _ in range(N_TGBS):
-        p.write_tgb(uniform_slice_bytes=payload)
-        p.maybe_commit(force=True)
-    p.finalize()
-    return ns
+    session = open_dataplane(bench_store(clock), Topology(dp=world, cp=1),
+                             backend="tgb", namespace="runs/fig10")
+    with session.writer("p0") as w:
+        for _ in range(N_TGBS):
+            w.write(uniform_slice_bytes=payload)
+            w.flush()
+    return session
 
 
-def _consume(ns, world: int, dense: bool, clock) -> dict:
+def _consume(session, world: int, dense: bool, clock) -> dict:
     lats, mbps, amps = [], [], []
 
     def rank(d):
-        c = Consumer(ns, MeshPosition(d, 0, world, 1), dense_read=dense)
+        r = session.reader(dp_rank=d, dense_read=dense)
         t0 = clock.now()
         for _ in range(N_TGBS):
-            c.next_batch(timeout_s=120)
+            r.next_batch(timeout_s=120)
         dt = clock.now() - t0
-        lats.extend(c.stats.read_latencies)
-        mbps.append(c.stats.bytes_consumed / dt / 1e6)
-        amps.append(c.stats.read_amplification)
+        lats.extend(r.stats.read_latencies)
+        mbps.append(r.stats.bytes_consumed / dt / 1e6)
+        amps.append(r.stats.read_amplification)
 
     run_threads([lambda d=d: rank(d) for d in range(world)])
     return {"MBps_per_rank": sum(mbps) / len(mbps),
@@ -50,20 +47,22 @@ def _consume(ns, world: int, dense: bool, clock) -> dict:
 
 def _consume_kafka(world: int, payload: int, clock) -> dict:
     broker = bench_broker(clock, max_message_bytes=world * payload + 10**6)
-    kp = KafkaTGBProducer(broker)
-    for i in range(N_TGBS):
-        kp.publish_tgb(build_uniform_tgb(f"t{i}", world, 1, "p", i, payload))
+    session = open_dataplane(broker, Topology(dp=world, cp=1), backend="mq",
+                             namespace="runs/fig10")
+    with session.writer("p") as w:
+        for _ in range(N_TGBS):
+            w.write(uniform_slice_bytes=payload)
     lats, mbps, amps = [], [], []
 
     def rank(d):
-        c = KafkaTGBConsumer(broker, d, 0, world, 1)
+        r = session.reader(dp_rank=d)
         t0 = clock.now()
         for _ in range(N_TGBS):
-            c.next_batch(timeout_s=120)
+            r.next_batch(timeout_s=120)
         dt = clock.now() - t0
-        lats.extend(c.read_latencies)
-        mbps.append(c.bytes_consumed / dt / 1e6)
-        amps.append(c.read_amplification)
+        lats.extend(r.stats.read_latencies)
+        mbps.append(r.stats.bytes_consumed / dt / 1e6)
+        amps.append(r.stats.read_amplification)
 
     run_threads([lambda d=d: rank(d) for d in range(world)])
     return {"MBps_per_rank": sum(mbps) / len(mbps),
@@ -80,10 +79,10 @@ def run(quick: bool = True) -> List[Row]:
     for world in worlds:
         for payload in payloads:
             clock = bench_clock()
-            ns = _materialize(clock, world, payload)
+            session = _materialize(clock, world, payload)
             t0 = time.monotonic()
-            bw = _consume(ns, world, dense=False, clock=clock)
-            dn = _consume(ns, world, dense=True, clock=clock)
+            bw = _consume(session, world, dense=False, clock=clock)
+            dn = _consume(session, world, dense=True, clock=clock)
             kf = _consume_kafka(world, payload, clock)
             wall = time.monotonic() - t0
             for name, r in (("batchweave", bw), ("dense_read", dn),

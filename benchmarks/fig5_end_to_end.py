@@ -1,9 +1,10 @@
 """Fig. 5 — end-to-end training throughput + per-step latency:
 BatchWeave vs colocated 'Local' vs strict-TGB Kafka.
 
-A GR00T-like workload: heavy per-sample preprocessing (modeled CPU seconds),
-trainer consuming one global batch per step with a modeled accelerator step.
-The three data planes differ exactly as in the paper:
+All three data planes run through the unified ``repro.dataplane`` facade —
+the same ``open_dataplane -> writer/reader -> next_batch`` call shape — so the
+comparison isolates the transport, not the client API. They differ exactly as
+in the paper:
 
   * Local       — preprocessing threads share the trainer node (contention
                   model + no failure isolation),
@@ -18,12 +19,9 @@ from typing import List
 
 from benchmarks.common import (Row, TIME_SCALE, bench_broker, bench_clock,
                                bench_store, percentile, run_threads)
-from repro.core import (Consumer, ManifestStore, MeshPosition, Namespace,
-                        Producer)
 from repro.core.dac import DACConfig, DACPolicy
-from repro.core.tgb import build_uniform_tgb
-from repro.data.colocated import ColocatedConfig, ColocatedPipeline
-from repro.data.mq import KafkaTGBConsumer, KafkaTGBProducer, RequestTimeout
+from repro.data.colocated import ColocatedConfig
+from repro.dataplane import BatchTimeout, Topology, open_dataplane
 
 # GR00T-flavoured workload, calibrated to the paper's regime: preprocessing is
 # CPU-bound (expansion-heavy), so the colocated node's 12 contended workers
@@ -36,53 +34,47 @@ ITEM_CPU_S = 0.7          # preprocessing core-seconds per rank-slice item
 PRODUCE_COST_S = ITEM_CPU_S * DP / 64   # per-TGB time on a dedicated node
 GPU_STEP_S = 0.17         # modeled accelerator step (paper BW P50 ~172 ms)
 
+TOPO = Topology(dp=DP, cp=1)
+
 
 def _batchweave() -> dict:
     clock = bench_clock()
-    store = bench_store(clock)
-    ns = Namespace(store, "runs/fig5")
+    session = open_dataplane(bench_store(clock), TOPO, backend="tgb",
+                             namespace="runs/fig5")
     stop = threading.Event()
 
     def producer_loop(pid):
-        p = Producer(ns, f"p{pid}", dp=DP, cp=1,
-                     manifests=ManifestStore(ns),
-                     policy=DACPolicy(DACConfig(eps=0.20)))
-        while not stop.is_set():
-            clock.sleep(PRODUCE_COST_S)
-            p.write_tgb(uniform_slice_bytes=SLICE_BYTES)
-            p.maybe_commit()
-        try:
-            p.finalize(max_attempts=50)
-        except RuntimeError:
-            pass
+        with session.writer(f"p{pid}",
+                            policy=DACPolicy(DACConfig(eps=0.20))) as w:
+            while not stop.is_set():
+                clock.sleep(PRODUCE_COST_S)
+                w.write(uniform_slice_bytes=SLICE_BYTES)
 
     producers = [threading.Thread(target=producer_loop, args=(i,), daemon=True)
                  for i in range(N_PRODUCERS)]
     for t in producers:
         t.start()
 
-    consumers = [Consumer(ns, MeshPosition(d, 0, DP, 1), prefetch_depth=4)
-                 for d in range(DP)]
+    readers = [session.reader(dp_rank=d, prefetch_depth=4) for d in range(DP)]
     # warm-up: producers accumulate a small backlog before step timing starts
     # (paper methodology: reported timing begins at first-batch arrival and
     # excludes initial producer warm-up)
-    while consumers[0].view.total_steps < 8:
-        consumers[0].poll()
+    while readers[0].published_steps < 8:
+        readers[0].poll()
         clock.sleep(0.02)
-    for c in consumers:
-        c.start_prefetch()
+    for r in readers:
+        r.start_prefetch()
     lat = []
     t_start = clock.now()
     for s in range(N_STEPS):
         t0 = clock.now()
-        for c in consumers:  # all-rank barrier per step
-            c.next_batch(timeout_s=600)
+        for r in readers:  # all-rank barrier per step
+            r.next_batch(timeout_s=600)
         clock.sleep(GPU_STEP_S)
         lat.append(clock.now() - t0)
     total = clock.now() - t_start
     stop.set()
-    for c in consumers:
-        c.stop_prefetch()
+    session.close()
     return {"steps_per_s": N_STEPS / total,
             "p50_ms": percentile(lat, 50) * 1e3,
             "p95_ms": percentile(lat, 95) * 1e3}
@@ -92,20 +84,35 @@ def _local() -> dict:
     clock = bench_clock()
     # preprocessing on the trainer node: 12 workers/rank-node, contended with
     # 8 trainer ranks for the node's 64 cores (paper's expert-tuned config)
-    pipe = ColocatedPipeline(
-        ColocatedConfig(workers=12, queue_depth=8, node_cpu=64,
-                        train_cpu=16, trainer_ranks_per_node=8),
+    session = open_dataplane(
+        None, TOPO, backend="colocated",
+        config=ColocatedConfig(workers=12, queue_depth=8, node_cpu=64,
+                               train_cpu=16, trainer_ranks_per_node=8),
         preprocess_cost_s=lambda i: ITEM_CPU_S,
         batch_cpu_items=DP, clock=clock)
-    pipe.start()
-    clock.sleep(1.0)  # same warm-up treatment: let the bounded queue fill
-    t0 = clock.now()
-    trace = pipe.run_training(steps=N_STEPS, gpu_step_s=GPU_STEP_S)
-    total = clock.now() - t0
-    pipe.stop()
-    return {"steps_per_s": len(trace.latencies) / total,
-            "p50_ms": trace.percentile(50) * 1e3,
-            "p95_ms": trace.percentile(95) * 1e3}
+    slowdown = session.slowdown
+    lat = []
+    stalls = 0
+    with session.writer():                  # enter: start the worker pool
+        clock.sleep(1.0)  # same warm-up treatment: let the bounded queue fill
+        reader = session.reader()
+        t_start = clock.now()
+        for _ in range(N_STEPS):
+            t0 = clock.now()  # stall time counts toward step latency
+            while True:
+                try:
+                    reader.next_batch(timeout_s=30)
+                    break
+                except BatchTimeout:
+                    stalls += 1  # starved, not dead: keep waiting
+            # the GPU step also pays the host-side contention tax
+            clock.sleep(GPU_STEP_S * slowdown)
+            lat.append(clock.now() - t0)
+        total = clock.now() - t_start
+    session.close()
+    return {"steps_per_s": len(lat) / total,
+            "p50_ms": percentile(lat, 50) * 1e3,
+            "p95_ms": percentile(lat, 95) * 1e3}
 
 
 def _kafka() -> dict:
@@ -113,23 +120,21 @@ def _kafka() -> dict:
     broker = bench_broker(clock, max_message_bytes=16 * SLICE_BYTES,
                           broker_ingest_Bps=400e6, broker_fetch_Bps=500e6,
                           request_timeout_s=20.0)
+    session = open_dataplane(broker, TOPO, backend="mq",
+                             namespace="runs/fig5")
     stop = threading.Event()
 
     def producer_loop(pid):
-        kp = KafkaTGBProducer(broker)
-        seq = 0
-        while not stop.is_set():
-            clock.sleep(PRODUCE_COST_S)
-            blob = build_uniform_tgb(f"{pid}-{seq}", DP, 1, f"p{pid}", seq,
-                                     SLICE_BYTES)
-            kp.publish_tgb(blob)
-            seq += 1
+        with session.writer(f"p{pid}") as w:
+            while not stop.is_set():
+                clock.sleep(PRODUCE_COST_S)
+                w.write(uniform_slice_bytes=SLICE_BYTES)  # None if dropped
 
     producers = [threading.Thread(target=producer_loop, args=(i,), daemon=True)
                  for i in range(N_PRODUCERS)]
     for t in producers:
         t.start()
-    consumers = [KafkaTGBConsumer(broker, d, 0, DP, 1) for d in range(DP)]
+    readers = [session.reader(dp_rank=d) for d in range(DP)]
     while broker.end_offset() < 8:   # same warm-up treatment
         clock.sleep(0.02)
     lat = []
@@ -138,15 +143,16 @@ def _kafka() -> dict:
     for s in range(N_STEPS):
         t0 = clock.now()
         try:
-            for c in consumers:
-                c.next_batch(timeout_s=120)
-        except RequestTimeout:
+            for r in readers:
+                r.next_batch(timeout_s=120)
+        except BatchTimeout:
             break
         clock.sleep(GPU_STEP_S)
         lat.append(clock.now() - t0)
         steps_done += 1
     total = clock.now() - t_start
     stop.set()
+    session.close()
     return {"steps_per_s": steps_done / max(total, 1e-9),
             "p50_ms": percentile(lat, 50) * 1e3,
             "p95_ms": percentile(lat, 95) * 1e3}

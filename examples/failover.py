@@ -1,65 +1,66 @@
-"""Fault-tolerance demo: producer crash + exactly-once takeover, consumer
-rollback, and checkpoint-aligned reclamation — the paper's §5.3 end to end.
+"""Fault-tolerance demo through the facade: producer crash + exactly-once
+takeover, consumer rollback via Checkpoint tokens, and checkpoint-aligned
+reclamation — the paper's §5.3 end to end.
 
 Run:  PYTHONPATH=src python examples/failover.py
 """
 import numpy as np
 
-from repro.core import (Consumer, FaultInjector, InjectedCrash, ManifestStore,
-                        MemoryObjectStore, MeshPosition, Namespace, Producer,
-                        Reclaimer, Watermark, write_watermark)
-from repro.data import PipelineConfig, PreprocessConfig, PreprocessWorker
+from repro.core import FaultInjector, InjectedCrash, MemoryObjectStore
+from repro.dataplane import Checkpoint, Topology, open_dataplane
 
 store = MemoryObjectStore(faults=FaultInjector())
-ns = Namespace(store, "runs/failover")
-pc = PipelineConfig(global_batch=2, seq_len=32, dp=1, cp=1, vocab_size=997,
-                    seed=42)
+topo = Topology(dp=1, cp=1, global_batch=2, seq_len=32)
+session = open_dataplane(store, topo, backend="tgb", namespace="runs/failover")
+
+
+def token_stream(seed: int, n_batches: int) -> np.ndarray:
+    """Deterministic preprocessing output: crash/replay yields identical TGBs."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 997, n_batches * topo.global_batch * topo.seq_len)
+
 
 # -- 1. producer crashes mid-commit ------------------------------------------
 store.faults.crash_on("cput", key_substr=".manifest", nth=4)
-prod = Producer(ns, "W", dp=1, cp=1, manifests=ManifestStore(ns))
-worker = PreprocessWorker(pc, PreprocessConfig(), prod)
+crashed_at = 0
 try:
-    while prod.next_offset < 10:
-        worker.produce_n_tgbs(1)
-        prod.maybe_commit(force=True)
-    prod.finalize()
+    with session.writer("W") as w:
+        for chunk in np.split(token_stream(seed=42, n_batches=10), 10):
+            w.write_tokens(chunk)
+            crashed_at = w.producer.next_offset  # offset the crash interrupts
+            w.flush()
 except InjectedCrash:
-    print(f"producer W crashed mid-commit at stream offset {prod.next_offset}")
+    print(f"producer W crashed mid-commit at stream offset {crashed_at}")
 store.faults = None
 
 # -- 2. replacement takes over exactly-once ------------------------------------
-view = ManifestStore(ns).load_view(ManifestStore(ns).latest_version())
+view = session.manifest_view()
 print(f"durable state says W committed through offset "
       f"{view.producer_offset('W')} ({view.total_steps} steps visible)")
-prod2 = Producer(ns, "W", dp=1, cp=1, manifests=ManifestStore(ns))
-resume = prod2.recover()
-prod2.next_offset = 0  # deterministic replay from the stream start
-worker2 = PreprocessWorker(pc, PreprocessConfig(), prod2)
-worker2.produce_n_tgbs(10)
-prod2.finalize()       # exactly-once dedup drops offsets < resume
-view = ManifestStore(ns).load_view(ManifestStore(ns).latest_version())
+with session.writer("W") as w2:
+    resume = w2.recovered_offset
+    w2.seek(0)  # deterministic replay from the stream start
+    w2.write_tokens(token_stream(seed=42, n_batches=10))
+    # exit: finalize — exactly-once dedup drops offsets < resume
+view = session.manifest_view()
 seqs = [t.producer_seq for t in view.tgbs]
 assert seqs == sorted(set(seqs)), "duplicate or reordered offsets!"
 print(f"replacement resumed at offset {resume}; stream is dense: "
       f"{seqs[:4]}...{seqs[-2:]} (no dups, no gaps)")
 
 # -- 3. consumer rollback --------------------------------------------------------
-cons = Consumer(ns, MeshPosition(0, 0, 1, 1))
-first = [cons.next_batch(5) for _ in range(6)]
-ckpt_cursor = cons.cursor  # (V, S) persisted with a model checkpoint
-more = [cons.next_batch(5) for _ in range(2)]
-cons2 = Consumer(ns, MeshPosition(0, 0, 1, 1))
-cons2.restore_cursor(ckpt_cursor[0], 4)
-replay = [cons2.next_batch(5) for _ in range(2)]
-assert replay == first[4:6]
+reader = session.reader()
+first = [reader.next_batch(timeout_s=5) for _ in range(6)]
+ckpt = Checkpoint("tgb", version=first[3].version, step=4)  # as-of step 4
+more = [reader.next_batch(timeout_s=5) for _ in range(2)]
+replayer = session.reader(resume=ckpt.encode())  # token round-trips as a string
+replay = [replayer.next_batch(timeout_s=5) for _ in range(2)]
+assert [b.payload for b in replay] == [b.payload for b in first[4:6]]
 print("rollback to checkpoint cursor replayed the identical batches")
 
 # -- 4. reclamation below W_global ----------------------------------------------
-write_watermark(ns, 0, Watermark(version=ckpt_cursor[0], step=4))
-rec = Reclaimer(ns, expected_ranks=1)
-rec.run_cycle()
-print(f"reclaimer deleted {rec.stats.tgbs_deleted} TGBs / "
-      f"{rec.stats.manifests_deleted} manifests below W_global; "
+session.save_watermark(0, ckpt)
+deleted = session.reclaim()
+print(f"reclaimer deleted {deleted} TGBs below W_global; "
       f"store now {store.total_bytes()} bytes")
 print("OK: exactly-once + rollback + reclamation all hold")

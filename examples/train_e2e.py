@@ -1,6 +1,6 @@
-"""End-to-end driver: train a decoder LM fed by BatchWeave, with checkpoints,
-watermark-driven reclamation, and a mid-run restart that resumes the exact
-batch sequence.
+"""End-to-end driver: train a decoder LM fed through the unified dataplane
+facade, with checkpoints, watermark-driven reclamation, and a mid-run restart
+that resumes the exact batch sequence.
 
 Default profile trains a ~8M-param model for 60 steps in a couple of minutes on
 CPU; ``--profile 100m --steps 300`` is the full assignment-scale run (same
@@ -16,10 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Consumer, DACPolicy, ManifestStore, MemoryObjectStore,
-                        MeshPosition, Namespace, Producer, Reclaimer)
+from repro.core import MemoryObjectStore
+from repro.core.dac import DACPolicy
 from repro.data import PipelineConfig, PreprocessConfig, PreprocessWorker
-from repro.data.packing import decode_slice
+from repro.dataplane import Checkpoint, Topology, open_dataplane
 from repro.models import ModelConfig, init_params, param_specs
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
 from repro.train.optimizer import OptimizerConfig, init_opt_state
@@ -54,7 +54,9 @@ def main():
           f"seq={prof['seq']} dp={dp}")
 
     store = MemoryObjectStore()
-    ns = Namespace(store, "runs/train_e2e")
+    topo = Topology(dp=dp, cp=1, global_batch=prof["gb"], seq_len=prof["seq"])
+    session = open_dataplane(store, topo, backend="tgb",
+                             namespace="runs/train_e2e")
     pc = PipelineConfig(global_batch=prof["gb"], seq_len=prof["seq"], dp=dp,
                         cp=1, vocab_size=cfg.vocab_size, seed=17)
 
@@ -62,16 +64,12 @@ def main():
     stop = threading.Event()
 
     def producer_thread(pid: int):
-        prod = Producer(ns, f"w{pid}", dp=dp, cp=1,
-                        manifests=ManifestStore(ns), policy=DACPolicy(),
-                        max_lag=64)
-        prod.recover()
-        worker = PreprocessWorker(pc, PreprocessConfig(), prod,
-                                  sample_stride=2, sample_offset=pid)
-        while not stop.is_set():
-            worker.produce_n_tgbs(4, stop=stop)
-            prod.maybe_commit(force=True)
-        prod.finalize()
+        with session.writer(f"w{pid}", policy=DACPolicy(), max_lag=64) as w:
+            worker = PreprocessWorker(pc, PreprocessConfig(), w.producer,
+                                      sample_stride=2, sample_offset=pid)
+            while not stop.is_set():
+                worker.produce_n_tgbs(4, stop=stop)
+                w.flush()
 
     threads = [threading.Thread(target=producer_thread, args=(i,), daemon=True)
                for i in range(2)]
@@ -85,14 +83,10 @@ def main():
         cfg, OptimizerConfig(learning_rate=3e-3, warmup_steps=10,
                              total_steps=max(100, args.steps)),
         StepConfig(microbatches=1)))
-    consumers = [Consumer(ns, MeshPosition(d, 0, dp, 1), prefetch_depth=4)
-                 for d in range(dp)]
-    reclaimer = Reclaimer(ns, expected_ranks=dp)
+    readers = [session.reader(dp_rank=d, prefetch_depth=4) for d in range(dp)]
 
     def one_step(params, opt):
-        shards = [decode_slice(c.next_batch(timeout_s=120),
-                               prof["gb"] // dp, prof["seq"])
-                  for c in consumers]
+        shards = [r.next_batch(timeout_s=120).tokens for r in readers]
         tokens = jnp.asarray(np.concatenate(shards, axis=0))
         return step_fn(params, opt, {"tokens": tokens})
 
@@ -104,33 +98,37 @@ def main():
         losses.append(float(metrics["loss"]))
         s += 1
         if s % args.ckpt_every == 0:
-            save_checkpoint(ns, step=s, state={"params": params, "opt": opt},
-                            cursor=consumers[0].cursor,
+            save_checkpoint(session.ns, step=s,
+                            state={"params": params, "opt": opt},
+                            cursor=readers[0].checkpoint().as_tuple(),
                             consumer_ranks=list(range(dp)))
-            reclaimer.run_cycle()
+            reclaimed = session.reclaim()
             print(f"step {s:4d} loss={losses[-1]:.3f} "
                   f"lr={float(metrics['lr']):.2e} "
                   f"store={store.total_bytes() / 2**20:.1f}MiB "
-                  f"reclaimed={reclaimer.stats.tgbs_deleted} tgbs "
+                  f"reclaimed={reclaimed} tgbs "
                   f"({(time.time() - t0) / s:.2f}s/step)")
         if args.restart_at is not None and s == args.restart_at:
             print(f"--- simulating trainer crash at step {s}; restoring ---")
             template = {"params": params, "opt": opt}
-            state, cursor, ckpt_step = restore_checkpoint(ns, template)
+            state, cursor, ckpt_step = restore_checkpoint(session.ns, template)
             params, opt = state["params"], state["opt"]
-            for c in consumers:
-                c.restore_cursor(*cursor)
+            token = Checkpoint("tgb", version=cursor[0], step=cursor[1])
+            for r in readers:
+                r.restore(token)
             s = ckpt_step
             args.restart_at = None
 
     stop.set()
     for t in threads:
         t.join(timeout=10)
+    session.close()
     print(f"first-10 mean loss {np.mean(losses[:10]):.3f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.3f} "
           f"({'improved' if np.mean(losses[-10:]) < np.mean(losses[:10]) else 'no improvement'})")
-    print(f"consumed {consumers[0].cursor[1]} global batches; "
-          f"read amplification {consumers[0].stats.read_amplification:.2f}x")
+    final = readers[0].checkpoint()
+    print(f"consumed {final.step} global batches; "
+          f"read amplification {readers[0].stats.read_amplification:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""BatchWeave reproduction: a consistent object-store-native data plane.
+
+The recommended client surface is the unified facade::
+
+    from repro import Topology, open_dataplane
+
+The underlying clients (``Producer``/``Consumer``, the Kafka-sim baseline,
+the colocated pipeline) remain importable — the facade wraps them, it does
+not replace them. Model/kernel/training subpackages (``repro.models``,
+``repro.kernels``, ``repro.train``) are intentionally NOT imported here so
+``import repro`` stays jax-free.
+"""
+from repro.core import (BatchTimeout, Consumer, MeshPosition, Producer,
+                        remap_step)
+from repro.data import (ColocatedPipeline, KafkaSimBroker, KafkaTGBConsumer,
+                        KafkaTGBProducer)
+from repro.dataplane import (Batch, BatchReader, BatchWriter, Checkpoint,
+                             DataPlaneSession, Topology, UnsupportedOperation,
+                             available_backends, open_dataplane,
+                             register_backend)
+
+__all__ = [
+    "Batch", "BatchReader", "BatchTimeout", "BatchWriter", "Checkpoint",
+    "ColocatedPipeline", "Consumer", "DataPlaneSession", "KafkaSimBroker",
+    "KafkaTGBConsumer", "KafkaTGBProducer", "MeshPosition", "Producer",
+    "Topology", "UnsupportedOperation", "available_backends",
+    "open_dataplane", "register_backend", "remap_step",
+]

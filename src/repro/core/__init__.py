@@ -12,6 +12,7 @@ Public surface:
 """
 from repro.core.clock import Clock, SystemClock, VirtualClock
 from repro.core.commit import CommitProtocol, CommitResult
+from repro.core.errors import BatchTimeout
 from repro.core.consumer import Consumer, ConsumerStats, MeshPosition, remap_step
 from repro.core.dac import (AIMDPolicy, CommitPolicy, DACConfig, DACPolicy,
                             FixedCountPolicy, IncrPolicy, NaivePolicy,
@@ -28,6 +29,7 @@ from repro.core.producer import Producer, ProducerStats, run_producer_loop
 from repro.core.tgb import TGBBuilder, TGBDescriptor, TGBFooter, TGBReader
 
 __all__ = [
+    "BatchTimeout",
     "Clock", "SystemClock", "VirtualClock",
     "CommitProtocol", "CommitResult",
     "Consumer", "ConsumerStats", "MeshPosition", "remap_step",

@@ -20,6 +20,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.errors import BatchTimeout
 from repro.core.manifest import DatasetView, ManifestStore
 from repro.core.objectstore import Namespace, NoSuchKey
 from repro.core.tgb import TGBFooter, TGBReader
@@ -153,7 +154,7 @@ class Consumer:
         while self.view.total_steps <= step:
             if not self.poll():
                 if timeout_s is not None and self.clock.now() - t0 > timeout_s:
-                    raise TimeoutError(
+                    raise BatchTimeout(
                         f"step {step} not published after {timeout_s}s "
                         f"(total={self.view.total_steps})")
                 self.clock.sleep(poll_gap)

@@ -1,0 +1,14 @@
+"""Shared data-plane error types.
+
+``BatchTimeout`` is the single timeout contract all batch readers honor,
+regardless of transport: the object-store ``Consumer``, the Kafka-sim
+``KafkaTGBConsumer``, and the colocated pipeline all raise it when the next
+global batch is not available within ``timeout_s``. It subclasses
+``TimeoutError`` so callers written against the original per-client exceptions
+keep working.
+"""
+from __future__ import annotations
+
+
+class BatchTimeout(TimeoutError):
+    """The next batch was not available within the caller's deadline."""

@@ -1,6 +1,7 @@
 """Data pipeline substrate: synthetic multimodal sources, online packing, the
 disaggregated preprocessing pipeline, and the two baseline data planes the
 paper evaluates against (colocated 'Local', Kafka-like MQ)."""
+from repro.core.errors import BatchTimeout
 from repro.data.colocated import ColocatedConfig, ColocatedPipeline, StepTrace
 from repro.data.mq import (BrokerConfig, KafkaSimBroker, KafkaTGBConsumer,
                            KafkaTGBProducer, MessageTooLarge, RequestTimeout)
@@ -10,6 +11,7 @@ from repro.data.sources import (PreprocessConfig, PreprocessResult, RawRecord,
                                 SyntheticSource, expansion_table, preprocess)
 
 __all__ = [
+    "BatchTimeout",
     "ColocatedConfig", "ColocatedPipeline", "StepTrace",
     "BrokerConfig", "KafkaSimBroker", "KafkaTGBConsumer", "KafkaTGBProducer",
     "MessageTooLarge", "RequestTimeout",

@@ -24,6 +24,7 @@ from queue import Empty, Full, Queue
 from typing import Callable, List, Optional
 
 from repro.core.clock import Clock, SystemClock
+from repro.core.errors import BatchTimeout
 
 
 @dataclass
@@ -67,6 +68,7 @@ class ColocatedPipeline:
         self._sample_idx = 0
         self._idx_lock = threading.Lock()
         self.crashed = threading.Event()
+        self._partial: List[int] = []  # items drawn for a not-yet-complete batch
 
     # -- contention model -------------------------------------------------------
     def _slowdown(self) -> float:
@@ -94,6 +96,7 @@ class ColocatedPipeline:
                     continue
 
     def start(self):
+        self._stop.clear()  # support stop/start cycles (writer re-entry)
         for w in range(self.cfg.workers):
             t = threading.Thread(target=self._worker, daemon=True,
                                  name=f"coloc-worker-{w}")
@@ -112,18 +115,41 @@ class ColocatedPipeline:
         self.crashed.set()
 
     # -- trainer side ---------------------------------------------------------------
+    def next_batch(self, timeout_s: Optional[float] = None) -> List[int]:
+        """Assemble one global batch's worth of preprocessed sample indices.
+
+        Same contract as ``repro.core.Consumer.next_batch``: raises
+        ``BatchTimeout`` if the batch cannot be assembled within ``timeout_s``
+        (including the permanent stall after a preprocessing crash). Items
+        already drawn from the queue survive a timeout and count toward the
+        next attempt.
+        """
+        t0 = self.clock.now()
+        while len(self._partial) < self.batch_cpu_items:
+            if self.crashed.is_set() and self.queue.empty():
+                raise BatchTimeout("preprocessing crashed; trainer stalled")
+            if timeout_s is not None and self.clock.now() - t0 > timeout_s:
+                raise BatchTimeout(
+                    f"global batch not assembled after {timeout_s}s "
+                    f"({len(self._partial)}/{self.batch_cpu_items} items)")
+            try:
+                self._partial.append(self.queue.get(timeout=0.05))
+            except Empty:
+                continue
+        items, self._partial = self._partial, []
+        return items
+
     def run_training(self, steps: int, gpu_step_s: float,
                      stall_timeout_s: float = 30.0) -> StepTrace:
         trace = StepTrace()
         slowdown = self._slowdown()
         for _ in range(steps):
-            t0 = self.clock.now()
-            got = 0
-            while got < self.batch_cpu_items:
+            t0 = self.clock.now()  # stall time counts toward step latency
+            while True:
                 try:
-                    self.queue.get(timeout=stall_timeout_s)
-                    got += 1
-                except Empty:
+                    self.next_batch(timeout_s=stall_timeout_s)
+                    break
+                except BatchTimeout:
                     trace.stalls += 1
                     if self.crashed.is_set():
                         return trace  # job stalls permanently

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.clock import Clock, SystemClock
+from repro.core.errors import BatchTimeout
 
 
 class MessageTooLarge(Exception):
@@ -175,10 +176,19 @@ class KafkaTGBConsumer:
         self.read_latencies: List[float] = []
 
     def next_batch(self, timeout_s: Optional[float] = None) -> bytes:
+        """Blocking read of this rank's slice for the next offset.
+
+        Same contract as ``repro.core.Consumer.next_batch``: raises
+        ``BatchTimeout`` if the message is not available within ``timeout_s``.
+        """
         from repro.core.tgb import TAIL_BYTES, TGBFooter, _TAIL
 
         t0 = self.broker.clock.now()
-        msg = self.broker.fetch(self.offset, timeout_s=timeout_s)
+        try:
+            msg = self.broker.fetch(self.offset, timeout_s=timeout_s)
+        except RequestTimeout as e:
+            raise BatchTimeout(
+                f"offset {self.offset} not published after {timeout_s}s") from e
         self.offset += 1
         self.bytes_fetched += len(msg)
         footer_len, _magic = _TAIL.unpack(msg[-TAIL_BYTES:])

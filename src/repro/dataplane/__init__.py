@@ -1,0 +1,72 @@
+"""Unified DataPlane session API with pluggable backends.
+
+One consistent batch-level abstraction over three interchangeable transports::
+
+    from repro.dataplane import Topology, open_dataplane
+
+    session = open_dataplane(store, Topology(dp=2, cp=2), backend="tgb",
+                             namespace="runs/myjob")
+    with session.writer("worker0") as w:        # recover() on enter
+        w.write(slice_payloads)                  # -> stream offset
+    # ... writer finalize() drains pending commits on clean exit
+
+    reader = session.reader(dp_rank=0, cp_rank=0)
+    batch = reader.next_batch(timeout_s=5)       # -> Batch (raises BatchTimeout)
+    token = reader.checkpoint().encode()         # opaque exactly-once cursor
+    session2 = open_dataplane(store, topo, backend="tgb", resume=token)
+
+Facade concept -> paper term (BatchWeave, arXiv 2026):
+
+  ``Batch``                one rank's (d, c) slice of a **TGB** (Training
+                           Global Batch, §3.1) — the immutable, batch-level
+                           unit both producers and consumers speak. ``step``
+                           is the global step index S; ``version`` is the
+                           manifest version V it became visible in.
+  ``BatchWriter``          a producer client: stage-1 TGB materialization +
+                           stage-2 manifest commit, cadence-governed by the
+                           **DAC** policy (Deadline-Aware Commit, Alg. 1).
+                           The context manager owns §5.3 exactly-once
+                           recovery (enter) and Alg. 1 finalization (exit).
+  ``BatchReader``          a consumer client: the paper's cursor ``<V, S>``
+                           with per-rank targeted range reads, prefetch, and
+                           §4.1 topology remap.
+  ``Checkpoint``           the opaque ``<V, S>`` cursor token; saving it with
+                           a model checkpoint and passing it back via
+                           ``resume=`` is the exactly-once restore flow.
+  ``save_watermark``       publish a rank's **watermark** W_i after a model
+                           checkpoint; ``reclaim`` trims everything below
+                           W_global = min_i(W_i) (§6 lifecycle).
+  ``backend="tgb"``        the object-store-native data plane (the paper's
+                           system); ``"mq"`` the strict-TGB Kafka baseline
+                           (§7.1); ``"colocated"`` the in-rank Local baseline
+                           (§2.2). New transports plug in via
+                           ``register_backend`` without touching call sites.
+"""
+from repro.core.errors import BatchTimeout
+from repro.dataplane.colocated_backend import (ColocatedBatchReader,
+                                               ColocatedSession,
+                                               ColocatedWriter)
+from repro.dataplane.colocated_backend import _factory as _colocated_factory
+from repro.dataplane.mq_backend import MQBatchReader, MQSession, MQWriter
+from repro.dataplane.mq_backend import _factory as _mq_factory
+from repro.dataplane.registry import (available_backends, backend_factory,
+                                      register_backend)
+from repro.dataplane.session import open_dataplane
+from repro.dataplane.tgb_backend import TGBBatchReader, TGBSession, TGBWriter
+from repro.dataplane.tgb_backend import _factory as _tgb_factory
+from repro.dataplane.types import (Batch, BatchReader, BatchWriter, Checkpoint,
+                                   DataPlaneSession, Topology,
+                                   UnsupportedOperation)
+
+for _name, _f in (("tgb", _tgb_factory), ("mq", _mq_factory),
+                  ("colocated", _colocated_factory)):
+    register_backend(_name, _f, overwrite=True)
+
+__all__ = [
+    "Batch", "BatchReader", "BatchTimeout", "BatchWriter", "Checkpoint",
+    "ColocatedBatchReader", "ColocatedSession", "ColocatedWriter",
+    "DataPlaneSession", "MQBatchReader", "MQSession", "MQWriter",
+    "TGBBatchReader", "TGBSession", "TGBWriter", "Topology",
+    "UnsupportedOperation", "available_backends", "backend_factory",
+    "open_dataplane", "register_backend",
+]

@@ -1,0 +1,44 @@
+"""``open_dataplane`` — the single entry point to every data-plane backend."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.dataplane.registry import backend_factory
+from repro.dataplane.types import Checkpoint, DataPlaneSession, Topology
+
+
+def open_dataplane(target, topology: Topology, backend: str = "tgb", *,
+                   namespace: str = "runs/dataplane",
+                   resume: "Checkpoint | str | None" = None,
+                   **backend_opts) -> DataPlaneSession:
+    """Open a data-plane session over an interchangeable backend.
+
+    Args:
+      target: the transport substrate — an ``ObjectStore`` for ``tgb``, a
+        ``KafkaSimBroker`` (or None to build one) for ``mq``, a
+        ``ColocatedPipeline``/Clock/None for ``colocated``. Custom backends
+        define their own target type.
+      topology: the consuming mesh's ``Topology`` (DP x CP, optionally the
+        global-batch token grid so readers decode arrays).
+      backend: registered backend name (see ``available_backends()``).
+      namespace: run prefix on the substrate (a fresh namespace is all a new
+        job needs).
+      resume: a ``Checkpoint`` (or its encoded token) to restore every reader
+        vended by this session — the exactly-once cursor restore flow.
+      **backend_opts: forwarded to the backend session factory.
+
+    Returns a session vending ``writer()`` / ``reader()`` handles that conform
+    to the shared ``BatchWriter`` / ``BatchReader`` protocols.
+    """
+    if not isinstance(topology, Topology):
+        raise TypeError(f"topology must be a dataplane Topology, got "
+                        f"{type(topology).__name__}")
+    ckpt = Checkpoint.coerce(resume)
+    if ckpt is not None and ckpt.backend != backend:
+        raise ValueError(
+            f"resume token was captured on backend {ckpt.backend!r} but this "
+            f"session uses {backend!r}; cursors are not portable across "
+            f"transports")
+    factory = backend_factory(backend)
+    return factory(target, topology, namespace=namespace, resume=ckpt,
+                   **backend_opts)

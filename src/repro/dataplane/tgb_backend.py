@@ -1,0 +1,210 @@
+"""`tgb` backend: the paper's object-store-native data plane.
+
+Maps the facade onto the BatchWeave clients:
+
+  writer  -> ``repro.core.Producer``  (TGB materialization + DAC-gated
+             conditional-put manifest commits; ``__enter__`` recovers the
+             durable stream offset, ``__exit__`` finalizes)
+  reader  -> ``repro.core.Consumer``  (per-rank range reads, footer cache,
+             prefetch, topology remap)
+  Checkpoint("tgb", V, S) -> the consumer cursor <V, S>
+
+The session additionally exposes the lifecycle half of the paper:
+``save_watermark`` (rank checkpoints publish W_i) and ``reclaim`` (trim
+everything below W_global).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.consumer import Consumer, MeshPosition
+from repro.core.dac import CommitPolicy
+from repro.core.lifecycle import Reclaimer, Watermark, write_watermark
+from repro.core.manifest import ManifestStore
+from repro.core.objectstore import Namespace, ObjectStore
+from repro.core.producer import Producer
+from repro.dataplane._base import PackingWriterMixin, SessionBase
+from repro.dataplane.types import Batch, Checkpoint, Topology
+
+
+class TGBWriter(PackingWriterMixin):
+    """Context-managed producer: recover on enter, finalize on clean exit."""
+
+    def __init__(self, ns: Namespace, topology: Topology, writer_id: str,
+                 policy: Optional[CommitPolicy] = None,
+                 max_lag: Optional[int] = None):
+        self.topology = topology
+        self.writer_id = writer_id
+        self.producer = Producer(ns, writer_id, dp=topology.dp, cp=topology.cp,
+                                 policy=policy, manifests=ManifestStore(ns),
+                                 max_lag=max_lag)
+        self.recovered_offset = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def __enter__(self) -> "TGBWriter":
+        self.recovered_offset = self.producer.recover()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.producer.finalize()
+        return False
+
+    # -- writes --------------------------------------------------------------
+    def write(self, slices=None, *, uniform_slice_bytes=None,
+              num_samples: int = 0, token_count: int = 0) -> int:
+        desc = self.producer.write_tgb(
+            slice_payloads=slices, uniform_slice_bytes=uniform_slice_bytes,
+            num_samples=num_samples, token_count=token_count)
+        self.producer.maybe_commit()  # cadence-gated by the commit policy
+        return desc.producer_seq
+
+    def flush(self) -> bool:
+        return self.producer.maybe_commit(force=True)
+
+    def seek(self, offset: int) -> None:
+        """Deterministic-replay support: rewind the stream offset. Already
+        committed offsets are deduplicated by the manifest commit protocol, so
+        replaying from 0 after a crash is exactly-once by construction."""
+        self.producer.next_offset = offset
+        self.producer.pending = []
+
+    @property
+    def lag_exceeded(self) -> bool:
+        return self.producer.lag_exceeded()
+
+    @property
+    def stats(self):
+        return self.producer.stats
+
+
+class TGBBatchReader:
+    """Facade reader over the per-rank range-read consumer."""
+
+    def __init__(self, ns: Namespace, topology: Topology, dp_rank: int,
+                 cp_rank: int, prefetch_depth: int = 4,
+                 dense_read: bool = False, verify_crc: bool = True,
+                 resume: "Checkpoint | str | None" = None):
+        self.topology = topology
+        self.consumer = Consumer(
+            ns, MeshPosition(dp_rank, cp_rank, topology.dp, topology.cp),
+            prefetch_depth=prefetch_depth, dense_read=dense_read,
+            verify_crc=verify_crc)
+        self.dp_rank, self.cp_rank = dp_rank, cp_rank
+        ckpt = Checkpoint.coerce(resume)
+        if ckpt is not None:
+            self.restore(ckpt)
+
+    def next_batch(self, timeout_s: Optional[float] = None) -> Batch:
+        step = self.consumer.step
+        payload = self.consumer.next_batch(timeout_s=timeout_s)
+        return Batch.build(payload, step=step,
+                           version=self.consumer.view.version,
+                           dp_rank=self.dp_rank, cp_rank=self.cp_rank,
+                           topology=self.topology)
+
+    def checkpoint(self) -> Checkpoint:
+        v, s = self.consumer.cursor
+        return Checkpoint("tgb", version=v, step=s)
+
+    def restore(self, ckpt: "Checkpoint | str") -> None:
+        ckpt = Checkpoint.coerce(ckpt)
+        if ckpt.backend != "tgb":
+            raise ValueError(f"cannot restore a {ckpt.backend!r} checkpoint "
+                             f"on a tgb reader")
+        self.consumer.restore_cursor(ckpt.version, ckpt.step)
+
+    def poll(self) -> bool:
+        """Probe for newly published batches; True if the view advanced."""
+        return self.consumer.poll()
+
+    @property
+    def published_steps(self) -> int:
+        """Global batches currently visible to this reader (backlog probe)."""
+        return self.consumer.view.total_steps
+
+    def start_prefetch(self) -> None:
+        self.consumer.start_prefetch()
+
+    def stop_prefetch(self) -> None:
+        self.consumer.stop_prefetch()
+
+    def close(self) -> None:
+        self.consumer.stop_prefetch()
+
+    @property
+    def stats(self):
+        return self.consumer.stats
+
+
+class TGBSession(SessionBase):
+    backend = "tgb"
+
+    def __init__(self, store: ObjectStore, topology: Topology, *,
+                 namespace: str = "runs/dataplane",
+                 resume: "Checkpoint | str | None" = None,
+                 expected_ranks: Optional[int] = None):
+        if not isinstance(store, ObjectStore):
+            raise TypeError(f"tgb backend needs an ObjectStore target, got "
+                            f"{type(store).__name__}")
+        self.store = store
+        self.topology = topology
+        self.ns = Namespace(store, namespace)
+        self._resume = Checkpoint.coerce(resume)
+        self._expected_ranks = expected_ranks or topology.world
+        self._reclaimer: Optional[Reclaimer] = None
+        self._readers: List[TGBBatchReader] = []
+
+    # -- clients -------------------------------------------------------------
+    def writer(self, writer_id: str = "w0", *,
+               policy: Optional[CommitPolicy] = None,
+               max_lag: Optional[int] = None) -> TGBWriter:
+        return TGBWriter(self.ns, self.topology, writer_id, policy=policy,
+                         max_lag=max_lag)
+
+    def reader(self, dp_rank: int = 0, cp_rank: int = 0, *,
+               prefetch_depth: int = 4, dense_read: bool = False,
+               verify_crc: bool = True,
+               resume: "Checkpoint | str | None" = None) -> TGBBatchReader:
+        r = TGBBatchReader(self.ns, self.topology, dp_rank, cp_rank,
+                           prefetch_depth=prefetch_depth,
+                           dense_read=dense_read, verify_crc=verify_crc,
+                           resume=resume if resume is not None
+                           else self._resume)
+        self._readers.append(r)
+        return r
+
+    # -- lifecycle -----------------------------------------------------------
+    def save_watermark(self, rank: int, ckpt: "Checkpoint | str") -> None:
+        ckpt = Checkpoint.coerce(ckpt)
+        write_watermark(self.ns, rank,
+                        Watermark(version=ckpt.version, step=ckpt.step))
+
+    def reclaim(self) -> int:
+        """One watermark-driven reclamation cycle; returns TGBs deleted so far."""
+        if self._reclaimer is None:
+            self._reclaimer = Reclaimer(self.ns,
+                                        expected_ranks=self._expected_ranks)
+        self._reclaimer.run_cycle()
+        return self._reclaimer.stats.tgbs_deleted
+
+    @property
+    def reclaim_stats(self):
+        if self._reclaimer is None:
+            self._reclaimer = Reclaimer(self.ns,
+                                        expected_ranks=self._expected_ranks)
+        return self._reclaimer.stats
+
+    def manifest_view(self):
+        """Latest committed DatasetView (introspection/debugging)."""
+        m = ManifestStore(self.ns)
+        return m.load_view(m.latest_version())
+
+    def close(self) -> None:
+        for r in self._readers:
+            r.close()
+        self._readers.clear()
+
+
+def _factory(target, topology, **opts) -> TGBSession:
+    return TGBSession(target, topology, **opts)

@@ -139,15 +139,17 @@ def _replica_group_size(line: str) -> int:
 def _dot_flops(inst: Instruction, shapes: Dict[str, str]) -> float:
     out_elems = _shape_elems(inst.type_str)
     # contraction size from lhs shape + lhs_contracting_dims
-    mo = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(inst.op):])
-    operands = []
-    if mo:
-        operands = [x.strip() for x in mo.group(1).split(",")]
+    operands = _operands(inst)
     mc = re.search(r"lhs_contracting_dims=\{([0-9, ]*)\}", inst.line)
     k = 1
     if mc and operands:
         lhs = operands[0]
-        lhs_type = shapes.get(lhs, "")
+        # the operand list usually carries the type inline
+        # (``dot(f32[32,64]{1,0} %lhs, ...)``); fall back to the module-wide
+        # shape table for the untyped ``dot(%lhs, %rhs)`` form
+        mt = re.search(r"([a-z0-9]+\[[0-9,]*\][^\s]*)\s+" + re.escape(lhs)
+                       + r"[,)]", inst.line)
+        lhs_type = mt.group(1) if mt else shapes.get(lhs, "")
         ms = _SHAPE_RE.search(lhs_type)
         if ms and ms.group(2):
             dims = [int(d) for d in ms.group(2).split(",")]
@@ -182,11 +184,16 @@ def _is_convert_only(comp: "Computation") -> bool:
                                  "bitcast"}
 
 
+_OPERAND_NAME_RE = re.compile(r"%[\w\.\-]+")
+
+
 def _operands(inst: Instruction) -> List[str]:
+    """Operand names, handling both ``op(%a, %b)`` and the typed form
+    ``op(f32[2,3]{1,0} %a, f32[3]{0} %b)`` newer XLA emits."""
     mo = re.search(r"\(([^)]*)\)", inst.line[inst.line.index(inst.op):])
     if not mo:
         return []
-    return [x.strip() for x in mo.group(1).split(",") if x.strip().startswith("%")]
+    return _OPERAND_NAME_RE.findall(mo.group(1))
 
 
 def _fusion_effective_bytes(fusion_inst: Instruction,

@@ -5,6 +5,12 @@ import os
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
     "do not set the dry-run XLA_FLAGS globally"
 
+try:
+    import hypothesis  # noqa: F401 — prefer the real library when present
+except ImportError:
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+    _install_hypothesis_fallback()
+
 import pytest
 
 from repro.core import MemoryObjectStore, Namespace

@@ -66,7 +66,11 @@ def test_microbatch_accumulation_equivalent():
     assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-5)
     diffs = jax.tree_util.tree_map(
         lambda a, b: float(jnp.max(jnp.abs(a - b))), outs[1][0], outs[4][0])
-    assert max(jax.tree_util.tree_leaves(diffs)) < 5e-5
+    # fp32 accumulation-order differences pass through Adam's 1/sqrt(v)
+    # normalization, so post-update params can differ by a few 1e-4 even when
+    # the grads match to fp32 roundoff; 5e-4 still catches real accumulation
+    # bugs (which show up at the 1e-2 learning-rate scale)
+    assert max(jax.tree_util.tree_leaves(diffs)) < 5e-4
 
 
 def test_loss_decreases_on_learnable_data():
