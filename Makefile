@@ -12,12 +12,13 @@ test-fast:
 		tests/test_consumer.py tests/test_manifest_commit.py tests/test_dac.py
 
 bench-smoke:
-	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10
+	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10,fig11
 
 bench-full:
 	$(PYTHON) benchmarks/run.py --full
 
 examples:
 	$(PYTHON) examples/quickstart.py
+	$(PYTHON) examples/sft_mixture.py
 	$(PYTHON) examples/failover.py
 	$(PYTHON) examples/train_e2e.py --steps 20 --ckpt-every 10

@@ -18,6 +18,7 @@ FIGS = [
     ("fig8", "benchmarks.fig8_exactly_once"),
     ("fig9", "benchmarks.fig9_lifecycle"),
     ("fig10", "benchmarks.fig10_consumer"),
+    ("fig11", "benchmarks.fig11_multisource"),
 ]
 
 

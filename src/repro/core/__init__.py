@@ -26,6 +26,7 @@ from repro.core.objectstore import (ConditionalPutFailed, FaultInjector,
                                     LatencyModel, MemoryObjectStore, Namespace,
                                     NoSuchKey, ObjectStore, ZERO_LATENCY)
 from repro.core.producer import Producer, ProducerStats, run_producer_loop
+from repro.core.stats import LatencyWindow
 from repro.core.tgb import TGBBuilder, TGBDescriptor, TGBFooter, TGBReader
 
 __all__ = [
@@ -42,6 +43,7 @@ __all__ = [
     "ConditionalPutFailed", "FaultInjector", "FileObjectStore", "InjectedCrash",
     "LatencyModel", "MemoryObjectStore", "Namespace", "NoSuchKey", "ObjectStore",
     "ZERO_LATENCY",
+    "LatencyWindow",
     "Producer", "ProducerStats", "run_producer_loop",
     "TGBBuilder", "TGBDescriptor", "TGBFooter", "TGBReader",
 ]

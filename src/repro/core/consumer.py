@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.errors import BatchTimeout
 from repro.core.manifest import DatasetView, ManifestStore
 from repro.core.objectstore import Namespace, NoSuchKey
+from repro.core.stats import LatencyWindow
 from repro.core.tgb import TGBFooter, TGBReader
 
 
@@ -33,7 +34,8 @@ class ConsumerStats:
     bytes_fetched: int = 0      # payload + footer/header overhead fetched
     footer_reads: int = 0
     manifest_polls: int = 0
-    read_latencies: List[float] = field(default_factory=list)
+    # bounded: fixed-size tail for percentiles + exact running count/sum
+    read_latencies: LatencyWindow = field(default_factory=LatencyWindow)
     prefetch_hits: int = 0
     prefetch_misses: int = 0
 
@@ -251,6 +253,31 @@ class Consumer:
             self._prefetch_thread.join(timeout=5)
             self._prefetch_thread = None
 
+    def _evict_overflow(self) -> None:
+        """Bound prefetch memory without starving the cursor. Caller holds
+        the lock.
+
+        Drop below-cursor leftovers first (a slow prefetch can land after
+        ``next_batch`` already fetched that step directly; nothing will ever
+        pop those keys), then evict farthest-ahead — never the slice about to
+        be consumed (insertion-order eviction could drop exactly that one
+        after a cursor restore)."""
+        cap = self.prefetch_depth + 2
+        if len(self._prefetched) <= cap:
+            return
+        try:
+            cursor_tgb_step, _d, _c = remap_step(self.step, self.pos,
+                                                 self._tgb_dp(), self._tgb_cp())
+        except ValueError:
+            cursor_tgb_step = None
+        if cursor_tgb_step is not None:
+            for key3 in [k for k in self._prefetched if k[0] < cursor_tgb_step]:
+                if len(self._prefetched) <= cap:
+                    break
+                self._prefetched.pop(key3)
+        while len(self._prefetched) > cap:
+            self._prefetched.pop(max(self._prefetched))
+
     def _prefetch_loop(self) -> None:
         while not self._prefetch_stop.is_set():
             fetched_any = False
@@ -276,9 +303,7 @@ class Consumer:
                     break
                 with self._prefetch_lock:
                     self._prefetched[key3] = data
-                    # bound memory
-                    while len(self._prefetched) > self.prefetch_depth + 2:
-                        self._prefetched.pop(next(iter(self._prefetched)))
+                    self._evict_overflow()
                 fetched_any = True
             if not fetched_any:
                 self.clock.sleep(0.005)

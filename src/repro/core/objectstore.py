@@ -14,9 +14,11 @@ This container has no real object-store endpoint, so we provide two backends
 grows with manifest size) are physically meaningful, and a ``FaultInjector`` for
 crash/flakiness tests.
 
-Conditional put is implemented with a locked check-insert (memory) and
-``os.open(O_CREAT | O_EXCL)`` (filesystem) — semantically identical to S3/GCS/Azure
-``If-None-Match:*`` used by the paper (§6).
+Conditional put is implemented with a locked check-insert (memory) and a
+fully-written temp file claimed via atomic ``os.link`` (filesystem) —
+semantically identical to S3/GCS/Azure ``If-None-Match:*`` used by the paper
+(§6), including its all-or-nothing visibility: a winner is only ever observed
+complete.
 """
 from __future__ import annotations
 
@@ -313,8 +315,9 @@ class MemoryObjectStore(ObjectStore):
 
 
 class FileObjectStore(ObjectStore):
-    """Filesystem backend. PUT = write-temp + rename (atomic); conditional PUT =
-    ``os.open(O_CREAT|O_EXCL)`` which is atomic on POSIX."""
+    """Filesystem backend. PUT = write-temp + rename (atomic); conditional
+    PUT = write-temp + ``os.link`` (atomic claim on POSIX, fails with EEXIST
+    if another writer won — the payload is complete before the key exists)."""
 
     def __init__(self, root: str, **kw):
         super().__init__(**kw)
@@ -329,8 +332,10 @@ class FileObjectStore(ObjectStore):
             raise ValueError(f"bad key {key!r}")
         return os.path.join(self.root, *key.split("/"))
 
-    def _do_put(self, key, data):
-        path = self._path(key)
+    def _write_tmp(self, path: str, data: bytes) -> str:
+        """Write the full payload to a unique sibling temp file and return its
+        path. The ``.tmp.`` infix is load-bearing: LIST and total_bytes
+        exclude in-flight files by it."""
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with self._tmp_lock:
             self._tmp_counter += 1
@@ -338,19 +343,30 @@ class FileObjectStore(ObjectStore):
         tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}.{n}"
         with open(tmp, "wb") as f:
             f.write(data)
-        os.replace(tmp, path)
+        return tmp
+
+    def _do_put(self, key, data):
+        path = self._path(key)
+        os.replace(self._write_tmp(path, data), path)
 
     def _do_put_if_absent(self, key, data):
+        # A bare O_CREAT|O_EXCL open would make an *empty* object visible
+        # before the payload lands, letting a concurrent reader observe a
+        # truncated manifest/TGB. Write the full payload to a temp file first,
+        # then claim the key with os.link — link(2) is atomic and fails with
+        # EEXIST if another writer won, so the object is only ever visible
+        # complete.
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
+        if os.path.exists(path):  # fast-path losers: skip the temp write
+            return False
+        tmp = self._write_tmp(path, data)
         try:
-            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            os.link(tmp, path)
         except FileExistsError:
             return False
-        try:
-            os.write(fd, data)
         finally:
-            os.close(fd)
+            os.unlink(tmp)
         return True
 
     def _do_get(self, key):
@@ -416,6 +432,17 @@ class Namespace:
 
     def key(self, *parts: str) -> str:
         return "/".join((self.prefix,) + parts)
+
+    def stream(self, name: str) -> "Namespace":
+        """Child namespace for one named TGB stream: ``<run>/streams/<name>``.
+
+        Each stream is a fully independent manifest chain — its own producers,
+        commit protocol, watermarks, and trim marker — so the single-stream
+        clients run unmodified under a per-stream prefix.
+        """
+        if not name or "/" in name or name in (".", ".."):
+            raise ValueError(f"bad stream name {name!r}")
+        return Namespace(self.store, self.key("streams", name))
 
     def manifest_key(self, version: int) -> str:
         return self.key("manifest", f"{version:08d}.manifest")

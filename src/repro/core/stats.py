@@ -1,0 +1,59 @@
+"""Bounded metric accumulators shared by consumer clients and baselines.
+
+Per-step latency lists previously grew one float per step for the life of the
+run — unbounded on a production trainer. ``LatencyWindow`` keeps a fixed-size
+tail (recent samples, enough for percentile estimates) plus an exact running
+count/sum, so long-run throughput math stays exact while memory stays O(1).
+
+It iterates like the list it replaces (``sorted(w)``, ``len(w)``,
+``list(w)``), so existing percentile helpers keep working unchanged.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, Iterator
+
+__all__ = ["LatencyWindow"]
+
+
+class LatencyWindow:
+    """Fixed-size sample tail + exact running count/sum."""
+
+    __slots__ = ("_tail", "count", "total")
+
+    def __init__(self, maxlen: int = 1024, samples: Iterable[float] = ()):
+        self._tail: "deque[float]" = deque(maxlen=maxlen)
+        self.count = 0      # exact number of samples ever recorded
+        self.total = 0.0    # exact sum of all samples ever recorded
+        self.extend(samples)
+
+    @property
+    def maxlen(self) -> int:
+        return self._tail.maxlen
+
+    def append(self, x: float) -> None:
+        self._tail.append(x)
+        self.count += 1
+        self.total += x
+
+    def extend(self, xs: Iterable[float]) -> None:
+        for x in xs:
+            self.append(x)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else float("nan")
+
+    # -- list-compatible read surface (tail only) ---------------------------
+    def __len__(self) -> int:
+        return len(self._tail)
+
+    def __iter__(self) -> Iterator[float]:
+        return iter(self._tail)
+
+    def __bool__(self) -> bool:
+        return bool(self._tail)
+
+    def __repr__(self) -> str:
+        return (f"LatencyWindow(count={self.count}, mean={self.mean:.6f}, "
+                f"tail={len(self._tail)}/{self.maxlen})")

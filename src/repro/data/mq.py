@@ -24,6 +24,7 @@ from typing import Dict, List, Optional
 
 from repro.core.clock import Clock, SystemClock
 from repro.core.errors import BatchTimeout
+from repro.core.stats import LatencyWindow
 
 
 class MessageTooLarge(Exception):
@@ -173,7 +174,8 @@ class KafkaTGBConsumer:
         self.offset = 0
         self.bytes_fetched = 0
         self.bytes_consumed = 0
-        self.read_latencies: List[float] = []
+        # bounded: fixed-size tail for percentiles + exact running count/sum
+        self.read_latencies = LatencyWindow()
 
     def next_batch(self, timeout_s: Optional[float] = None) -> bytes:
         """Blocking read of this rank's slice for the next offset.

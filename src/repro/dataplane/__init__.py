@@ -41,6 +41,12 @@ Facade concept -> paper term (BatchWeave, arXiv 2026):
                            (§7.1); ``"colocated"`` the in-rank Local baseline
                            (§2.2). New transports plug in via
                            ``register_backend`` without touching call sites.
+  ``streams={...}``        beyond-paper multi-stream mode (tgb only): N named
+                           TGB streams, each an independent manifest chain
+                           under ``<run>/streams/<name>``, deterministically
+                           interleaved by weight (``repro.streams``). Readers
+                           become MixedReaders and checkpoints become
+                           composite (per-stream cursors + mix position).
 """
 from repro.core.errors import BatchTimeout
 from repro.dataplane.colocated_backend import (ColocatedBatchReader,

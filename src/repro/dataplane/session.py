@@ -1,15 +1,18 @@
 """``open_dataplane`` — the single entry point to every data-plane backend."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Mapping, Optional
 
 from repro.dataplane.registry import backend_factory
-from repro.dataplane.types import Checkpoint, DataPlaneSession, Topology
+from repro.dataplane.types import (Checkpoint, DataPlaneSession, Topology,
+                                   UnsupportedOperation)
 
 
 def open_dataplane(target, topology: Topology, backend: str = "tgb", *,
                    namespace: str = "runs/dataplane",
                    resume: "Checkpoint | str | None" = None,
+                   streams: Optional[Mapping[str, float]] = None,
+                   mix_seed: int = 0,
                    **backend_opts) -> DataPlaneSession:
     """Open a data-plane session over an interchangeable backend.
 
@@ -24,7 +27,17 @@ def open_dataplane(target, topology: Topology, backend: str = "tgb", *,
       namespace: run prefix on the substrate (a fresh namespace is all a new
         job needs).
       resume: a ``Checkpoint`` (or its encoded token) to restore every reader
-        vended by this session — the exactly-once cursor restore flow.
+        vended by this session — the exactly-once cursor restore flow. With
+        ``streams`` this must be a composite token (a MixedReader
+        checkpoint).
+      streams: optional ``{name: weight}`` map of named TGB streams. When
+        given (tgb backend only) the session is multi-stream: ``writer(...,
+        stream=<name>)`` vends per-stream producers and ``reader(...)``
+        returns one MixedReader whose step sequence deterministically
+        interleaves the streams by weight.
+      mix_seed: seed of the deterministic mixing schedule (only meaningful
+        with ``streams``; the schedule is a pure function of
+        ``(weights, mix_seed, step)``).
       **backend_opts: forwarded to the backend session factory.
 
     Returns a session vending ``writer()`` / ``reader()`` handles that conform
@@ -39,6 +52,16 @@ def open_dataplane(target, topology: Topology, backend: str = "tgb", *,
             f"resume token was captured on backend {ckpt.backend!r} but this "
             f"session uses {backend!r}; cursors are not portable across "
             f"transports")
+    if streams is not None:
+        if backend != "tgb":
+            raise UnsupportedOperation(
+                f"multi-stream sessions need the object-store-native 'tgb' "
+                f"backend (per-stream namespace prefixes); got {backend!r}")
+        from repro.streams import MultiStreamSession
+
+        return MultiStreamSession(target, topology, streams=streams,
+                                  mix_seed=mix_seed, namespace=namespace,
+                                  resume=ckpt, **backend_opts)
     factory = backend_factory(backend)
     return factory(target, topology, namespace=namespace, resume=ckpt,
                    **backend_opts)

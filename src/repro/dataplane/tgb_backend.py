@@ -112,6 +112,10 @@ class TGBBatchReader:
         if ckpt.backend != "tgb":
             raise ValueError(f"cannot restore a {ckpt.backend!r} checkpoint "
                              f"on a tgb reader")
+        if ckpt.composite:
+            raise ValueError("composite multi-stream checkpoint cannot be "
+                             "restored on a single-stream reader (open the "
+                             "session with streams={...})")
         self.consumer.restore_cursor(ckpt.version, ckpt.step)
 
     def poll(self) -> bool:
@@ -177,6 +181,11 @@ class TGBSession(SessionBase):
     # -- lifecycle -----------------------------------------------------------
     def save_watermark(self, rank: int, ckpt: "Checkpoint | str") -> None:
         ckpt = Checkpoint.coerce(ckpt)
+        if ckpt.composite:
+            raise ValueError(
+                "composite multi-stream checkpoint cannot be used as a "
+                "single-stream watermark (its step is the global mixed step; "
+                "use the multi-stream session's save_watermark)")
         write_watermark(self.ns, rank,
                         Watermark(version=ckpt.version, step=ckpt.step))
 

@@ -86,7 +86,10 @@ class Batch:
     decoded ``(samples_per_slice, seq_per_rank)`` int32 token grid when the
     session's Topology carries the grid shape and the payload matches it.
     ``version`` is the manifest version the batch became visible in (-1 for
-    backends without a versioned control plane).
+    backends without a versioned control plane). ``stream`` names the source
+    stream on a multi-stream session (None on single-stream sessions), in
+    which case ``step`` is the *global* mixed step and ``version`` is that
+    stream's manifest version.
     """
 
     payload: bytes
@@ -95,6 +98,7 @@ class Batch:
     dp_rank: int
     cp_rank: int
     array: Optional[np.ndarray] = None
+    stream: Optional[str] = None
 
     @property
     def tokens(self) -> np.ndarray:
@@ -109,7 +113,8 @@ class Batch:
 
     @staticmethod
     def build(payload: bytes, step: int, version: int, dp_rank: int,
-              cp_rank: int, topology: Topology) -> "Batch":
+              cp_rank: int, topology: Topology,
+              stream: Optional[str] = None) -> "Batch":
         arr = None
         if topology.decodable:
             want = topology.samples_per_slice * topology.seq_per_rank * 4
@@ -117,7 +122,8 @@ class Batch:
                 arr = np.frombuffer(payload, dtype=np.int32).reshape(
                     topology.samples_per_slice, topology.seq_per_rank)
         return Batch(payload=payload, step=step, version=version,
-                     dp_rank=dp_rank, cp_rank=cp_rank, array=arr)
+                     dp_rank=dp_rank, cp_rank=cp_rank, array=arr,
+                     stream=stream)
 
 
 _CKPT_MAGIC = "bwck1"
@@ -132,15 +138,36 @@ class Checkpoint:
     offset; for colocated it is the step counter. ``encode()`` yields a
     printable token safe to embed in a model checkpoint; ``open_dataplane``
     and ``reader.restore`` accept either the object or the encoded string.
+
+    On a multi-stream session the token is *composite*: ``step`` is the global
+    mixed step (the mix position — the schedule itself is recomputed from
+    ``(weights, seed)``, never stored) and ``streams`` carries every stream's
+    ``<V, S>`` cursor as ``(name, version, step)`` triples sorted by name.
+    Single-stream tokens have ``streams=None`` and decode unchanged.
     """
 
     backend: str
     version: int
     step: int
+    streams: Optional[Tuple[Tuple[str, int, int], ...]] = None
+
+    @property
+    def composite(self) -> bool:
+        return self.streams is not None
+
+    def stream_cursor(self, name: str) -> Tuple[int, int]:
+        """(version, step) cursor of one named stream in a composite token."""
+        for sname, v, s in self.streams or ():
+            if sname == name:
+                return (v, s)
+        raise KeyError(f"checkpoint has no cursor for stream {name!r}")
 
     def encode(self) -> str:
-        raw = msgpack.packb({"m": _CKPT_MAGIC, "b": self.backend,
-                             "v": self.version, "s": self.step})
+        doc = {"m": _CKPT_MAGIC, "b": self.backend,
+               "v": self.version, "s": self.step}
+        if self.streams is not None:
+            doc["st"] = [list(row) for row in self.streams]
+        raw = msgpack.packb(doc)
         return base64.urlsafe_b64encode(raw).decode("ascii")
 
     @staticmethod
@@ -150,7 +177,11 @@ class Checkpoint:
                                 raw=False)
             if d.get("m") != _CKPT_MAGIC:
                 raise ValueError("bad magic")
-            return Checkpoint(backend=d["b"], version=d["v"], step=d["s"])
+            streams = None
+            if d.get("st") is not None:
+                streams = tuple(tuple(row) for row in d["st"])
+            return Checkpoint(backend=d["b"], version=d["v"], step=d["s"],
+                              streams=streams)
         except Exception as e:
             raise ValueError(f"not a dataplane Checkpoint token: {token!r}") from e
 

@@ -1,0 +1,144 @@
+"""MixedReader: one rank's multiplexed view over N named TGB streams.
+
+Implements the facade ``BatchReader`` protocol. Each global step g is routed
+to the stream the ``MixPlan`` schedules there; because per-stream steps are
+dense and ordered, every underlying single-stream consumer just advances its
+normal ``<V, S>`` cursor — the mixing layer adds no new read path, only
+routing.
+
+Exactly-once across streams: ``checkpoint()`` emits one composite token
+carrying the mix position (the next global step) plus every stream's
+``<V, S>`` cursor; ``restore()`` re-validates that the per-stream cursors are
+exactly what the (weights, seed) schedule implies at that mix position, so a
+token captured under different mix settings can never silently misalign the
+streams.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional
+
+from repro.core.objectstore import Namespace
+from repro.dataplane.tgb_backend import TGBBatchReader
+from repro.dataplane.types import Batch, Checkpoint, Topology
+from repro.streams.mixplan import MixPlan
+
+__all__ = ["MixedReader"]
+
+
+class MixedReader:
+    """Facade reader multiplexing per-stream consumers via a MixPlan."""
+
+    def __init__(self, plan: MixPlan, stream_namespaces: Mapping[str, Namespace],
+                 topology: Topology, dp_rank: int, cp_rank: int, *,
+                 prefetch_depth: int = 4, dense_read: bool = False,
+                 verify_crc: bool = True,
+                 resume: "Checkpoint | str | None" = None):
+        self.plan = plan
+        self.topology = topology
+        self.dp_rank, self.cp_rank = dp_rank, cp_rank
+        self._subs: Dict[str, TGBBatchReader] = {
+            name: TGBBatchReader(stream_namespaces[name], topology,
+                                 dp_rank, cp_rank,
+                                 prefetch_depth=prefetch_depth,
+                                 dense_read=dense_read,
+                                 verify_crc=verify_crc)
+            for name in plan.names
+        }
+        self.global_step = 0  # next mixed step this reader will return
+        ckpt = Checkpoint.coerce(resume)
+        if ckpt is not None:
+            self.restore(ckpt)
+
+    # -- reads ----------------------------------------------------------------
+    def next_batch(self, timeout_s: Optional[float] = None) -> Batch:
+        name, stream_step = self.plan.position(self.global_step)
+        sub = self._subs[name]
+        if sub.consumer.step != stream_step:
+            raise RuntimeError(
+                f"stream {name!r} cursor {sub.consumer.step} diverged from "
+                f"schedule step {stream_step} at global step "
+                f"{self.global_step}; restore from a composite checkpoint")
+        inner = sub.next_batch(timeout_s=timeout_s)
+        batch = Batch.build(inner.payload, step=self.global_step,
+                            version=inner.version, dp_rank=self.dp_rank,
+                            cp_rank=self.cp_rank, topology=self.topology,
+                            stream=name)
+        self.global_step += 1
+        return batch
+
+    # -- cursor ----------------------------------------------------------------
+    def checkpoint(self) -> Checkpoint:
+        """Composite token: mix position + every stream's <V, S> cursor."""
+        rows = []
+        for name in self.plan.names:
+            v, s = self._subs[name].consumer.cursor
+            rows.append((name, v, s))
+        return Checkpoint("tgb", version=-1, step=self.global_step,
+                          streams=tuple(rows))
+
+    def restore(self, ckpt: "Checkpoint | str") -> None:
+        ckpt = Checkpoint.coerce(ckpt)
+        if ckpt.backend != "tgb":
+            raise ValueError(f"cannot restore a {ckpt.backend!r} checkpoint "
+                             f"on a tgb mixed reader")
+        if not ckpt.composite:
+            raise ValueError("single-stream checkpoint cannot be restored on "
+                             "a multi-stream reader")
+        names = tuple(sorted(row[0] for row in ckpt.streams))
+        if names != self.plan.names:
+            raise ValueError(
+                f"checkpoint streams {names} do not match session streams "
+                f"{self.plan.names}")
+        # the schedule is pure in (weights, seed, step): per-stream cursors
+        # MUST equal the scheduled counts at the mix position, otherwise the
+        # token was captured under different mix settings
+        expect = self.plan.stream_counts(ckpt.step)
+        for name, _v, s in ckpt.streams:
+            if s != expect[name]:
+                raise ValueError(
+                    f"composite checkpoint is inconsistent with this "
+                    f"session's MixPlan: stream {name!r} cursor {s} != "
+                    f"scheduled count {expect[name]} at mix step {ckpt.step} "
+                    f"(were weights/seed changed?)")
+        for name, v, s in ckpt.streams:
+            self._subs[name].consumer.restore_cursor(v, s)
+        self.global_step = ckpt.step
+
+    # -- progress probes --------------------------------------------------------
+    def poll(self) -> bool:
+        """Probe all streams for newly committed manifests."""
+        advanced = False
+        for sub in self._subs.values():
+            advanced |= sub.poll()
+        return advanced
+
+    @property
+    def published_steps(self) -> int:
+        """Contiguous global steps currently servable: the first global step
+        whose owning stream has not yet published the scheduled stream step.
+        Anchored at this reader's cursor — everything below it was served."""
+        published = {name: sub.published_steps
+                     for name, sub in self._subs.items()}
+        return self.plan.frontier(published, start=self.global_step)
+
+    def stream_lag(self) -> Dict[str, int]:
+        """Per-stream backlog: published-but-unconsumed stream steps."""
+        return {name: sub.published_steps - sub.consumer.step
+                for name, sub in self._subs.items()}
+
+    # -- prefetch / lifecycle ----------------------------------------------------
+    def start_prefetch(self) -> None:
+        for sub in self._subs.values():
+            sub.start_prefetch()
+
+    def stop_prefetch(self) -> None:
+        for sub in self._subs.values():
+            sub.stop_prefetch()
+
+    def close(self) -> None:
+        for sub in self._subs.values():
+            sub.close()
+
+    @property
+    def stats(self) -> Dict[str, object]:
+        return {name: sub.stats for name, sub in self._subs.items()}

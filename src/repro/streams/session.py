@@ -1,0 +1,144 @@
+"""MultiStreamSession: one training run owning N named TGB streams.
+
+Opened through the facade::
+
+    session = open_dataplane(store, topo, backend="tgb",
+                             streams={"web": 0.7, "code": 0.3}, mix_seed=42,
+                             namespace="runs/pretrain")
+    with session.writer("w0", stream="web") as w: ...
+    reader = session.reader(dp_rank=0, cp_rank=0)   # -> MixedReader
+
+Each stream is an independent manifest chain under ``<run>/streams/<name>``;
+producers attach to exactly one stream and are oblivious to the mixing layer.
+The deterministic MixPlan (weights, seed) is the *only* cross-stream state,
+and it is config, not data — nothing about the schedule is ever persisted.
+
+Lifecycle is mix-aware: ``save_watermark`` splits a composite checkpoint into
+per-stream ``(version, stream_step)`` watermarks, so each stream's reclaimer
+computes its own W_global over exactly the steps mixed readers can still
+revisit, and a stream never reclaims a TGB the mix still needs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional
+
+from repro.core.dac import CommitPolicy
+from repro.core.objectstore import Namespace, ObjectStore
+from repro.dataplane._base import SessionBase
+from repro.dataplane.tgb_backend import TGBWriter
+from repro.dataplane.types import Checkpoint, Topology
+from repro.streams.mixed_reader import MixedReader
+from repro.streams.mixplan import MixPlan
+from repro.streams.stream import Stream
+
+__all__ = ["MultiStreamSession"]
+
+
+class MultiStreamSession(SessionBase):
+    """A handle on one run's multi-stream data plane (tgb transport)."""
+
+    backend = "tgb"
+
+    def __init__(self, store: ObjectStore, topology: Topology, *,
+                 streams: Mapping[str, float], mix_seed: int = 0,
+                 namespace: str = "runs/dataplane",
+                 resume: "Checkpoint | str | None" = None,
+                 expected_ranks: Optional[int] = None):
+        if not isinstance(store, ObjectStore):
+            raise TypeError(f"tgb backend needs an ObjectStore target, got "
+                            f"{type(store).__name__}")
+        self.store = store
+        self.topology = topology
+        self.ns = Namespace(store, namespace)
+        self.plan = MixPlan(streams, seed=mix_seed)
+        self.mix_seed = mix_seed
+        self._expected_ranks = expected_ranks or topology.world
+        self.streams: Dict[str, Stream] = {
+            name: Stream(self.ns, name, self.plan.weights[name],
+                         self._expected_ranks)
+            for name in self.plan.names
+        }
+        self._resume = Checkpoint.coerce(resume)
+        if self._resume is not None and not self._resume.composite:
+            raise ValueError("multi-stream session needs a composite "
+                             "checkpoint token (one carrying per-stream "
+                             "cursors), got a single-stream token")
+        self._readers: List[MixedReader] = []
+        self._frontier = 0  # last known contiguous mix frontier (monotone)
+
+    # -- clients -------------------------------------------------------------
+    @property
+    def stream_names(self):
+        return self.plan.names
+
+    def writer(self, writer_id: str = "w0", *, stream: Optional[str] = None,
+               policy: Optional[CommitPolicy] = None,
+               max_lag: Optional[int] = None) -> TGBWriter:
+        """A producer handle bound to one named stream."""
+        if stream is None or stream not in self.streams:
+            raise ValueError(
+                f"multi-stream writer needs stream=<name>; available: "
+                f"{', '.join(self.plan.names)} (got {stream!r})")
+        return TGBWriter(self.streams[stream].ns, self.topology, writer_id,
+                         policy=policy, max_lag=max_lag)
+
+    def reader(self, dp_rank: int = 0, cp_rank: int = 0, *,
+               prefetch_depth: int = 4, dense_read: bool = False,
+               verify_crc: bool = True,
+               resume: "Checkpoint | str | None" = None) -> MixedReader:
+        r = MixedReader(self.plan,
+                        {name: s.ns for name, s in self.streams.items()},
+                        self.topology, dp_rank, cp_rank,
+                        prefetch_depth=prefetch_depth, dense_read=dense_read,
+                        verify_crc=verify_crc,
+                        resume=resume if resume is not None else self._resume)
+        self._readers.append(r)
+        return r
+
+    # -- mix-aware lifecycle ---------------------------------------------------
+    def save_watermark(self, rank: int, ckpt: "Checkpoint | str") -> None:
+        """Split a composite checkpoint into per-stream mix-aware watermarks."""
+        ckpt = Checkpoint.coerce(ckpt)
+        if not ckpt.composite:
+            raise ValueError("multi-stream save_watermark needs a composite "
+                             "checkpoint (reader.checkpoint() of a "
+                             "MixedReader)")
+        for name, version, stream_step in ckpt.streams:
+            self.streams[name].save_watermark(rank, version, stream_step)
+
+    def reclaim(self) -> int:
+        """One reclamation cycle per stream; returns total TGBs deleted so
+        far. Each stream trims only below its own mix-aware W_global."""
+        return sum(s.reclaim_cycle() for s in self.streams.values())
+
+    @property
+    def reclaim_stats(self) -> Dict[str, object]:
+        return {name: s.reclaimer().stats for name, s in self.streams.items()}
+
+    # -- introspection ----------------------------------------------------------
+    def manifest_view(self, stream: str):
+        """Latest committed DatasetView of one stream."""
+        return self.streams[stream].manifest_view()
+
+    def published_steps(self) -> int:
+        """Contiguous global (mixed) steps currently servable. Published
+        counts only grow, so the probe resumes from the last frontier."""
+        published = {name: s.published_steps
+                     for name, s in self.streams.items()}
+        self._frontier = self.plan.frontier(published, start=self._frontier)
+        return self._frontier
+
+    def stream_lag(self, upto_global_step: Optional[int] = None
+                   ) -> Dict[str, int]:
+        """Per-stream published-ahead backlog relative to the mix frontier
+        (``published stream steps - steps the mix has scheduled``)."""
+        counts = self.plan.stream_counts(
+            self.published_steps() if upto_global_step is None
+            else upto_global_step)
+        return {name: s.published_steps - counts[name]
+                for name, s in self.streams.items()}
+
+    def close(self) -> None:
+        for r in self._readers:
+            r.close()
+        self._readers.clear()

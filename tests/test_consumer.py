@@ -148,3 +148,45 @@ def test_tp_pp_transparent():
     a = Consumer(ns, MeshPosition(1, 1, 2, 2))
     b = Consumer(ns, MeshPosition(1, 1, 2, 2))  # a TP peer: same coords
     assert a.next_batch(1.0) == b.next_batch(1.0)
+
+
+def test_prefetch_eviction_keeps_next_needed_slice():
+    """After a cursor restore, overflow eviction must drop the farthest-ahead
+    stale entries, not the slice the consumer is about to read."""
+    ns = _filled_ns(n_tgbs=12, dp=1, cp=1)
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1), prefetch_depth=2)
+    # simulate leftovers from before a backward restore (steps 8..11) plus
+    # freshly prefetched near-cursor entries (steps 0..2)
+    cons.step = 0
+    for s in (8, 9, 10, 11, 0, 1, 2):
+        cons._prefetched[(s, 0, 0)] = b"x"
+    with cons._prefetch_lock:
+        cons._evict_overflow()
+    kept = sorted(k[0] for k in cons._prefetched)
+    assert len(kept) == cons.prefetch_depth + 2
+    assert kept == [0, 1, 2, 8]  # far-ahead stale steps evicted first
+
+    # stale *below*-cursor leftovers (slow prefetch landing after a direct
+    # fetch) go first of all — nothing would ever pop them otherwise
+    cons.step = 9
+    cons._prefetched.clear()
+    for s in (0, 1, 2, 3, 9, 10, 11):
+        cons._prefetched[(s, 0, 0)] = b"x"
+    with cons._prefetch_lock:
+        cons._evict_overflow()
+    kept = sorted(k[0] for k in cons._prefetched)
+    assert len(kept) == cons.prefetch_depth + 2
+    assert set(kept) >= {9, 10, 11}  # the live window survives intact
+
+
+def test_consumer_stats_latencies_bounded_window():
+    from repro.core import LatencyWindow
+
+    ns = _filled_ns(n_tgbs=4, dp=1, cp=1)
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1))
+    for _ in range(4):
+        cons.next_batch(1.0)
+    lats = cons.stats.read_latencies
+    assert isinstance(lats, LatencyWindow)
+    assert lats.count == 4 and len(lats) == 4
+    assert all(t >= 0 for t in lats)

@@ -100,3 +100,50 @@ def test_namespace_keys():
     assert ns.manifest_key(11) == "runs/exp1/manifest/00000011.manifest"
     assert ns.tgb_key("p0", 5, "ab").startswith("runs/exp1/tgb/p0/000000000005-")
     assert "rank00003" in ns.watermark_key(3)
+
+
+def test_conditional_put_never_exposes_partial_object(tmp_path):
+    """A losing or in-flight conditional put must never make a truncated
+    object visible: the key is claimed via an atomic link of a fully-written
+    temp file, so any reader that sees the key sees the whole payload."""
+    import os
+
+    store = FileObjectStore(str(tmp_path / "atomic"))
+    payload = b"z" * 1_000_000
+    stop = threading.Event()
+    partials = []
+
+    def watcher():
+        while not stop.is_set():
+            try:
+                n = store.head("claimed")
+            except NoSuchKey:
+                continue
+            if n != len(payload):
+                partials.append(n)
+
+    t = threading.Thread(target=watcher, daemon=True)
+    t.start()
+    for i in range(20):
+        assert store.put_if_absent("claimed", payload)
+        assert not store.put_if_absent("claimed", b"short loser")
+        assert store.get("claimed") == payload
+        store.delete("claimed")
+    stop.set()
+    t.join(timeout=5)
+    assert partials == []
+    # losers leave no temp-file litter behind
+    leftovers = [fn for _, _, fns in os.walk(store.root)
+                 for fn in fns if ".tmp." in fn]
+    assert leftovers == []
+
+
+def test_namespace_stream_scoping():
+    ns = Namespace(MemoryObjectStore(), "runs/exp1")
+    web = ns.stream("web")
+    assert web.manifest_key(3) == "runs/exp1/streams/web/manifest/00000003.manifest"
+    assert web.trim_key().startswith("runs/exp1/streams/web/")
+    with pytest.raises(ValueError):
+        ns.stream("")
+    with pytest.raises(ValueError):
+        ns.stream("..")

@@ -1,0 +1,290 @@
+"""Multi-stream data plane: deterministic mixing, composite exactly-once
+checkpoints across producer/reader kill-and-restore, and mix-aware per-stream
+trimming."""
+import numpy as np
+import pytest
+
+from repro.core import (FaultInjector, InjectedCrash, LatencyWindow,
+                        MemoryObjectStore, Namespace)
+from repro.dataplane import (Checkpoint, Topology, UnsupportedOperation,
+                             open_dataplane)
+from repro.streams import MixPlan, MixedReader, MultiStreamSession
+
+TOPO = Topology(dp=2, cp=1, global_batch=4, seq_len=8)
+WEIGHTS = {"web": 0.6, "code": 0.3, "math-sft": 0.1}
+
+
+def _fill_stream(session, stream, n_batches, seed, writer_id="w0"):
+    """Publish n_batches with a payload pattern unique to (stream, seed)."""
+    rng = np.random.default_rng(seed)
+    with session.writer(writer_id, stream=stream) as w:
+        for _ in range(n_batches):
+            w.write_tokens(rng.integers(0, 30_000,
+                                        TOPO.global_batch * TOPO.seq_len))
+            w.flush()
+
+
+def _open(store, streams=WEIGHTS, seed=7, **kw):
+    return open_dataplane(store, TOPO, backend="tgb", streams=streams,
+                          mix_seed=seed, namespace="runs/mix", **kw)
+
+
+# ---------------------------------------------------------------------------
+# MixPlan: deterministic, weight-faithful, dense per-stream substeps
+# ---------------------------------------------------------------------------
+
+def test_mixplan_pure_function_of_weights_seed_step():
+    a = MixPlan(WEIGHTS, seed=13)
+    b = MixPlan(dict(reversed(list(WEIGHTS.items()))), seed=13)  # order-free
+    assert a.schedule(500) == b.schedule(500)
+    # positions are recomputable out of order (restore path: no stored state)
+    fresh = MixPlan(WEIGHTS, seed=13)
+    assert fresh.position(321) == a.schedule(500)[321]
+    assert MixPlan(WEIGHTS, seed=14).schedule(500) != a.schedule(500)
+
+
+def test_mixplan_counts_track_weights_with_bounded_deviation():
+    plan = MixPlan(WEIGHTS, seed=3)
+    n = 1000
+    counts = plan.stream_counts(n)
+    assert sum(counts.values()) == n
+    for name, w in plan.weights.items():
+        assert abs(counts[name] - n * w) <= len(WEIGHTS), (name, counts)
+    # per-stream substeps are dense and ordered: k-th visit gets stream_step k
+    seen = {name: 0 for name in plan.names}
+    for name, sstep in plan.schedule(n):
+        assert sstep == seen[name]
+        seen[name] += 1
+
+
+def test_mixplan_rejects_bad_config():
+    with pytest.raises(ValueError):
+        MixPlan({})
+    with pytest.raises(ValueError):
+        MixPlan({"a": 0.0})
+    with pytest.raises(ValueError):
+        MixPlan({"": 1.0})
+    with pytest.raises(ValueError):
+        Namespace(MemoryObjectStore(), "runs/x").stream("a/b")
+
+
+# ---------------------------------------------------------------------------
+# Mixed reading: schedule-faithful routing, composite checkpoints
+# ---------------------------------------------------------------------------
+
+def test_mixed_reader_follows_schedule_and_payloads():
+    store = MemoryObjectStore()
+    session = _open(store)
+    for i, name in enumerate(session.stream_names):
+        _fill_stream(session, name, 12, seed=100 + i)
+    # reference: read each stream directly through a single-stream session
+    # under its per-stream namespace — mixing must only route, never alter
+    direct = {}
+    for name in session.stream_names:
+        s1 = open_dataplane(store, TOPO, backend="tgb",
+                            namespace=f"runs/mix/streams/{name}")
+        r1 = s1.reader(dp_rank=1, cp_rank=0)
+        direct[name] = [r1.next_batch(timeout_s=5).payload for _ in range(12)]
+    r = session.reader(dp_rank=1, cp_rank=0)
+    for g in range(20):
+        want_name, want_sstep = session.plan.position(g)
+        b = r.next_batch(timeout_s=5)
+        assert (b.step, b.stream) == (g, want_name)
+        assert b.payload == direct[want_name][want_sstep]
+        assert b.tokens.shape == (TOPO.samples_per_slice, TOPO.seq_per_rank)
+
+
+def test_composite_checkpoint_token_roundtrip():
+    ck = Checkpoint("tgb", version=-1, step=17,
+                    streams=(("code", 3, 5), ("web", 8, 12)))
+    assert ck.composite
+    assert Checkpoint.decode(ck.encode()) == ck
+    assert ck.stream_cursor("web") == (8, 12)
+    with pytest.raises(KeyError):
+        ck.stream_cursor("nope")
+    # plain tokens still decode with streams=None
+    plain = Checkpoint("tgb", version=4, step=9)
+    assert not Checkpoint.decode(plain.encode()).composite
+
+
+def test_single_and_multi_stream_checkpoints_do_not_cross():
+    store = MemoryObjectStore()
+    session = _open(store)
+    for name in session.stream_names:
+        _fill_stream(session, name, 3, seed=1)
+    r = session.reader()
+    r.next_batch(timeout_s=5)
+    composite = r.checkpoint()
+    single = open_dataplane(store, TOPO, backend="tgb", namespace="runs/s1")
+    with pytest.raises(ValueError, match="composite"):
+        single.reader().restore(composite)
+    with pytest.raises(ValueError, match="composite"):
+        single.save_watermark(0, composite)  # would corrupt W_global
+    with pytest.raises(ValueError, match="single-stream"):
+        r.restore(Checkpoint("tgb", version=0, step=1))
+    with pytest.raises(ValueError, match="composite"):
+        _open(store, resume=Checkpoint("tgb", version=0, step=1))
+
+
+def test_restore_rejects_checkpoint_from_different_mix_config():
+    store = MemoryObjectStore()
+    session = _open(store, seed=7)
+    for name in session.stream_names:
+        _fill_stream(session, name, 8, seed=2)
+    r = session.reader()
+    for _ in range(10):
+        r.next_batch(timeout_s=5)
+    ck = r.checkpoint()
+    # inverted weights -> scheduled counts at step 10 cannot match the cursors
+    other = _open(store, streams={"web": 0.1, "code": 0.3, "math-sft": 0.6},
+                  seed=7)
+    with pytest.raises(ValueError, match="MixPlan"):
+        other.reader(resume=ck)
+
+
+def test_streams_require_tgb_backend():
+    with pytest.raises(UnsupportedOperation):
+        open_dataplane(None, TOPO, backend="mq", streams=WEIGHTS)
+    # single-stream call sites are untouched by the new parameters
+    s = open_dataplane(MemoryObjectStore(), TOPO, backend="tgb")
+    assert not isinstance(s, MultiStreamSession)
+    with pytest.raises(ValueError, match="stream="):
+        _open(MemoryObjectStore()).writer("w0")
+    with pytest.raises(ValueError, match="stream="):
+        _open(MemoryObjectStore()).writer("w0", stream="nope")
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once across streams: kill-and-restore producer AND mixed reader
+# ---------------------------------------------------------------------------
+
+def test_exactly_once_across_streams_with_producer_and_reader_restarts():
+    """Acceptance: kill one producer mid-commit and the mixed reader mid-run;
+    after both restore, the replayed global step sequence equals the full
+    deterministic step->(stream, stream_step) schedule with zero duplicated
+    and zero skipped steps."""
+    store = MemoryObjectStore(faults=FaultInjector())
+    session = _open(store)
+    total = 20
+    # publish exactly what the schedule needs for `total` global steps: the
+    # mix frontier then lands on `total` precisely
+    need = session.plan.stream_counts(total)
+    streams = list(session.stream_names)
+
+    # fill all but the heaviest stream cleanly; crash that one's producer
+    crash_stream = max(streams, key=lambda n: need[n])
+    for i, name in enumerate(streams):
+        if name != crash_stream:
+            _fill_stream(session, name, need[name], seed=200 + i)
+    n_crash = need[crash_stream]
+    crash_tokens = np.random.default_rng(299).integers(
+        0, 30_000, n_crash * TOPO.global_batch * TOPO.seq_len)
+    store.faults.crash_on("cput", key_substr=f"streams/{crash_stream}/",
+                          nth=3)
+    with pytest.raises(InjectedCrash):
+        with session.writer("wX", stream=crash_stream) as w:
+            for chunk in np.split(crash_tokens, n_crash):
+                w.write_tokens(chunk)
+                w.flush()
+    store.faults = None
+    # replacement producer with the same id replays from 0: the manifest
+    # dedups already-committed offsets (exactly-once on the producer side)
+    with session.writer("wX", stream=crash_stream) as w2:
+        assert w2.recovered_offset >= 1
+        w2.seek(0)
+        w2.write_tokens(crash_tokens)
+    view = session.manifest_view(crash_stream)
+    assert [t.producer_seq for t in view.tgbs] == list(range(n_crash))
+
+    assert session.published_steps() == total
+
+    # reference pass: one uninterrupted reader over the full schedule
+    ref_reader = session.reader(dp_rank=0, cp_rank=0)
+    ref = [(b.step, b.stream, b.payload)
+           for b in (ref_reader.next_batch(5) for _ in range(total))]
+
+    # kill-and-restore pass: consume 7, checkpoint, new session + new reader
+    r = session.reader(dp_rank=0, cp_rank=0)
+    got = [(b.step, b.stream, b.payload)
+           for b in (r.next_batch(5) for _ in range(7))]
+    token = r.checkpoint().encode()   # travels through a model checkpoint
+    r.close()
+    del session, r
+
+    resumed = _open(store, resume=token)
+    r2 = resumed.reader(dp_rank=0, cp_rank=0)
+    got += [(b.step, b.stream, b.payload)
+            for b in (r2.next_batch(5) for _ in range(total - 7))]
+
+    assert got == ref
+    steps = [g[0] for g in got]
+    assert steps == list(range(total))  # zero skipped, zero duplicated
+    sched = resumed.plan.schedule(total)
+    assert [g[1] for g in got] == [name for name, _ in sched]
+
+
+# ---------------------------------------------------------------------------
+# Mix-aware lifecycle: trim never reclaims a step the mix still needs
+# ---------------------------------------------------------------------------
+
+def test_per_stream_trim_respects_mix_low_watermark():
+    store = MemoryObjectStore()
+    session = _open(store, expected_ranks=1)
+    for i, name in enumerate(session.stream_names):
+        _fill_stream(session, name, 10, seed=300 + i)
+    r = session.reader(dp_rank=0, cp_rank=0)
+    consumed = 11
+    for _ in range(consumed):
+        r.next_batch(timeout_s=5)
+    ck = r.checkpoint()
+    session.save_watermark(0, ck)
+    deleted = session.reclaim()
+    assert deleted > 0  # something below the mix watermark was reclaimed
+
+    # every TGB at/above each stream's mix-aware cursor must still be readable:
+    # a second rank restoring from the same composite checkpoint replays fine
+    r2 = session.reader(dp_rank=1, cp_rank=0, resume=ck)
+    remaining = session.published_steps() - consumed
+    for _ in range(remaining):
+        assert r2.next_batch(timeout_s=5) is not None
+
+    # and per stream, nothing at/above the checkpoint cursor was deleted
+    counts = session.plan.stream_counts(consumed)
+    for name in session.stream_names:
+        stats = session.reclaim_stats[name]
+        view = session.manifest_view(name)
+        assert stats.tgbs_deleted <= counts[name]
+        live = {t.object_key for t in view.tgbs}
+        for sstep in range(counts[name], view.total_steps):
+            key = view.tgb_at_step(sstep).object_key
+            assert key in live and store.exists(key), (name, sstep)
+
+
+def test_watermark_requires_composite_checkpoint():
+    session = _open(MemoryObjectStore())
+    with pytest.raises(ValueError, match="composite"):
+        session.save_watermark(0, Checkpoint("tgb", version=0, step=1))
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: bounded latency stats
+# ---------------------------------------------------------------------------
+
+def test_latency_window_bounds_memory_keeps_exact_totals():
+    w = LatencyWindow(maxlen=16)
+    for i in range(1000):
+        w.append(float(i))
+    assert len(w) == 16                      # tail is bounded
+    assert w.count == 1000                   # running count stays exact
+    assert w.total == sum(range(1000))       # running sum stays exact
+    assert sorted(w) == [float(x) for x in range(984, 1000)]
+    assert w.mean == pytest.approx(499.5)
+
+
+def test_consumer_and_mq_latency_stats_are_bounded():
+    from repro.core import ConsumerStats
+    from repro.data.mq import KafkaSimBroker, KafkaTGBConsumer
+
+    assert isinstance(ConsumerStats().read_latencies, LatencyWindow)
+    consumer = KafkaTGBConsumer(KafkaSimBroker(), 0, 0, 1, 1)
+    assert isinstance(consumer.read_latencies, LatencyWindow)
