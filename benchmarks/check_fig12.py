@@ -1,0 +1,80 @@
+"""CI gate for fig12: fail if the coalesced/parallel I/O path regresses
+below the scalar baseline (model time).
+
+Usage: python benchmarks/check_fig12.py bench-smoke.csv
+
+Checks (from the fig12 acceptance criteria):
+  * coalesced p50 step read latency < scalar p50 for every CP span >= 2
+  * parallel steps/s > scalar steps/s for every prefetch depth >= 4
+  * read amplification of the coalesced path stays ~1x (< 1.25x; the
+    speculative footer over-read is charged to bytes_fetched)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from typing import Dict
+
+
+def parse(path: str) -> Dict[str, Dict[str, float]]:
+    rows: Dict[str, Dict[str, float]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("fig12/"):
+                continue
+            name, _us, derived = line.split(",", 2)
+            fields = {}
+            for kv in derived.split(";"):
+                if "=" not in kv:
+                    continue
+                k, v = kv.split("=", 1)
+                m = re.match(r"-?\d+(\.\d+)?", v)
+                if m:
+                    fields[k] = float(m.group(0))
+            rows[name] = fields
+    return rows
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench-smoke.csv"
+    rows = parse(path)
+    if not rows:
+        print(f"check_fig12: no fig12 rows found in {path}", file=sys.stderr)
+        return 2
+    failures = []
+    for span in (2, 4):
+        sc = rows.get(f"fig12/io_path/read/span{span}/scalar")
+        co = rows.get(f"fig12/io_path/read/span{span}/coalesced")
+        if sc is None or co is None:
+            continue
+        if co["p50_ms"] >= sc["p50_ms"]:
+            failures.append(
+                f"span{span}: coalesced p50 {co['p50_ms']:.2f}ms >= "
+                f"scalar p50 {sc['p50_ms']:.2f}ms")
+        if co.get("amp", 0.0) >= 1.25:
+            failures.append(f"span{span}: coalesced amp {co['amp']:.3f}x >= 1.25x")
+    for name, fields in rows.items():
+        m = re.match(r"fig12/io_path/prefetch/depth(\d+)/parallel$", name)
+        if not m or int(m.group(1)) < 4:
+            continue
+        sc = rows.get(name.replace("/parallel", "/scalar"))
+        if sc is None:
+            continue
+        if fields["steps_per_s"] <= sc["steps_per_s"]:
+            failures.append(
+                f"depth{m.group(1)}: parallel {fields['steps_per_s']:.1f} "
+                f"steps/s <= scalar {sc['steps_per_s']:.1f} steps/s")
+    if failures:
+        print("check_fig12: coalesced/parallel I/O path regressed:",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"check_fig12: OK ({len(rows)} fig12 rows, "
+          f"coalesced beats scalar on all gated configs)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

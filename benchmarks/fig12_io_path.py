@@ -1,0 +1,139 @@
+"""Fig. 12 — pipelined zero-copy I/O path: scalar vs coalesced/parallel.
+
+Three sub-experiments over identical pre-materialized datasets (model time,
+simulated S3-class latency):
+
+  * ``read``     — per-step read latency without prefetch, sweeping the
+    CP-shrink span (consumer CP smaller than the TGB's materialized CP by
+    1x/2x/4x). Scalar issues ``span`` sequential range GETs plus a
+    two-request footer open; coalesced issues one vectored GET per step and
+    a single speculative-tail footer open.
+  * ``prefetch`` — steps/s with prefetch enabled, sweeping prefetch depth.
+    Scalar prefetches one slice at a time from a single thread; parallel
+    keeps ``depth`` fetches in flight on the shared IOPool.
+  * ``commit``   — producer materialization with sync vs pipelined manifest
+    commits (next TGB builds/uploads while the conditional put is in flight).
+
+Acceptance (checked by ``benchmarks/check_fig12.py`` in CI): coalesced p50
+step read latency beats scalar for span >= 2, parallel steps/s beats scalar
+for depth >= 4, and read amplification stays ~1x with the footer over-read
+counted in ``bytes_fetched``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, bench_clock, bench_store, percentile
+from repro.core import (Consumer, IOPool, ManifestStore, MeshPosition,
+                        NaivePolicy, Namespace, Producer)
+
+N_TGBS = 12
+DP = 2
+TGB_CP = 4
+SLICE_BYTES = 256_000
+
+
+def _materialize(clock, ns_name: str, n_tgbs: int = N_TGBS,
+                 pipeline: bool = False, io_pool=None):
+    store = bench_store(clock)
+    ns = Namespace(store, ns_name)
+    p = Producer(ns, "p0", dp=DP, cp=TGB_CP, policy=NaivePolicy(),
+                 manifests=ManifestStore(ns), pipeline_commits=pipeline,
+                 io_pool=io_pool)
+    for _ in range(n_tgbs):
+        p.write_tgb(uniform_slice_bytes=SLICE_BYTES)
+        p.maybe_commit()
+    p.finalize()
+    return ns
+
+
+def _read_latency(clock, ns, cp_size: int, scalar: bool) -> dict:
+    """Direct next_batch() reads (no prefetch): pure read-path latency."""
+    if scalar:
+        cons = Consumer(ns, MeshPosition(0, 0, DP, cp_size),
+                        parallel_prefetch=False, coalesce_reads=False,
+                        speculative_tail=0)
+    else:
+        cons = Consumer(ns, MeshPosition(0, 0, DP, cp_size))
+    for _ in range(N_TGBS):
+        cons.next_batch(timeout_s=60)
+    lats = sorted(cons.stats.read_latencies)
+    return {"p50_ms": percentile(lats, 50) * 1e3,
+            "p99_ms": percentile(lats, 99) * 1e3,
+            "amp": cons.stats.read_amplification}
+
+
+def _steps_per_s(clock, ns, depth: int, scalar: bool, pool) -> dict:
+    """Prefetch-enabled consumption rate: how fast the read pipeline can feed
+    a rank that consumes as fast as data arrives."""
+    kw = dict(prefetch_depth=depth)
+    if scalar:
+        cons = Consumer(ns, MeshPosition(0, 0, DP, 2),
+                        parallel_prefetch=False, coalesce_reads=False,
+                        speculative_tail=0, **kw)
+    else:
+        cons = Consumer(ns, MeshPosition(0, 0, DP, 2), io_pool=pool, **kw)
+    cons.poll()
+    cons.start_prefetch()
+    try:
+        t0 = clock.now()
+        for _ in range(N_TGBS):
+            cons.next_batch(timeout_s=60)
+        dt = max(1e-9, clock.now() - t0)
+    finally:
+        cons.stop_prefetch()
+    lats = sorted(cons.stats.read_latencies)
+    return {"steps_per_s": N_TGBS / dt,
+            "p50_ms": percentile(lats, 50) * 1e3,
+            "hit_rate": cons.stats.prefetch_hits / max(1, N_TGBS)}
+
+
+def _commit_rate(clock, pipeline: bool, pool) -> dict:
+    t0 = clock.now()
+    _materialize(clock, f"runs/fig12-commit-{int(pipeline)}",
+                 pipeline=pipeline, io_pool=pool)
+    dt = max(1e-9, clock.now() - t0)
+    return {"tgbs_per_s": N_TGBS / dt}
+
+
+def run(quick: bool = True) -> List[Row]:
+    spans = [1, 2, 4]
+    depths = [1, 4] if quick else [1, 4, 8]
+    pool = IOPool(max_workers=8, name="fig12-io")
+    out: List[Row] = []
+    try:
+        # -- read latency across CP spans (span = TGB_CP / cp_size) ----------
+        for span in spans:
+            cp_size = TGB_CP // span
+            for mode in ("scalar", "coalesced"):
+                clock = bench_clock()
+                ns = _materialize(clock, f"runs/fig12-read-{span}-{mode}")
+                r = _read_latency(clock, ns, cp_size, scalar=(mode == "scalar"))
+                out.append(Row(
+                    f"fig12/io_path/read/span{span}/{mode}",
+                    r["p50_ms"] * 1e3,
+                    f"p50_ms={r['p50_ms']:.2f};p99_ms={r['p99_ms']:.2f};"
+                    f"amp={r['amp']:.3f}x"))
+        # -- steps/s across prefetch depths (span 2 workload) -----------------
+        for depth in depths:
+            for mode in ("scalar", "parallel"):
+                clock = bench_clock()
+                ns = _materialize(clock, f"runs/fig12-pf-{depth}-{mode}")
+                r = _steps_per_s(clock, ns, depth, scalar=(mode == "scalar"),
+                                 pool=pool)
+                out.append(Row(
+                    f"fig12/io_path/prefetch/depth{depth}/{mode}",
+                    1e6 / max(1e-9, r["steps_per_s"]),
+                    f"steps_per_s={r['steps_per_s']:.1f};"
+                    f"p50_ms={r['p50_ms']:.2f};hit_rate={r['hit_rate']:.2f}"))
+        # -- producer commit pipelining ---------------------------------------
+        for mode in ("sync", "pipelined"):
+            clock = bench_clock()
+            r = _commit_rate(clock, pipeline=(mode == "pipelined"), pool=pool)
+            out.append(Row(
+                f"fig12/io_path/commit/{mode}",
+                1e6 / max(1e-9, r["tgbs_per_s"]),
+                f"tgbs_per_s={r['tgbs_per_s']:.1f}"))
+    finally:
+        pool.shutdown()
+    return out

@@ -19,6 +19,7 @@ FIGS = [
     ("fig9", "benchmarks.fig9_lifecycle"),
     ("fig10", "benchmarks.fig10_consumer"),
     ("fig11", "benchmarks.fig11_multisource"),
+    ("fig12", "benchmarks.fig12_io_path"),
 ]
 
 

@@ -21,13 +21,15 @@ from repro.core.lifecycle import (Reclaimer, Watermark, global_watermark,
                                   read_watermarks, write_watermark)
 from repro.core.manifest import (DatasetView, ManifestStore, ProducerState,
                                  MANIFEST_FORMAT_DELTA, MANIFEST_FORMAT_FLAT)
-from repro.core.objectstore import (ConditionalPutFailed, FaultInjector,
-                                    FileObjectStore, InjectedCrash,
-                                    LatencyModel, MemoryObjectStore, Namespace,
-                                    NoSuchKey, ObjectStore, ZERO_LATENCY)
+from repro.core.objectstore import (ConditionalPutFailed, DEFAULT_COALESCE_GAP,
+                                    FaultInjector, FileObjectStore, IOPool,
+                                    InjectedCrash, LatencyModel,
+                                    MemoryObjectStore, Namespace, NoSuchKey,
+                                    ObjectStore, ZERO_LATENCY, coalesce_ranges)
 from repro.core.producer import Producer, ProducerStats, run_producer_loop
 from repro.core.stats import LatencyWindow
-from repro.core.tgb import TGBBuilder, TGBDescriptor, TGBFooter, TGBReader
+from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TGBBuilder, TGBDescriptor,
+                            TGBFooter, TGBReader)
 
 __all__ = [
     "BatchTimeout",
@@ -40,10 +42,12 @@ __all__ = [
     "write_watermark",
     "DatasetView", "ManifestStore", "ProducerState",
     "MANIFEST_FORMAT_DELTA", "MANIFEST_FORMAT_FLAT",
-    "ConditionalPutFailed", "FaultInjector", "FileObjectStore", "InjectedCrash",
+    "ConditionalPutFailed", "DEFAULT_COALESCE_GAP", "FaultInjector",
+    "FileObjectStore", "IOPool", "InjectedCrash",
     "LatencyModel", "MemoryObjectStore", "Namespace", "NoSuchKey", "ObjectStore",
-    "ZERO_LATENCY",
+    "ZERO_LATENCY", "coalesce_ranges",
     "LatencyWindow",
     "Producer", "ProducerStats", "run_producer_loop",
+    "SPECULATIVE_TAIL_BYTES",
     "TGBBuilder", "TGBDescriptor", "TGBFooter", "TGBReader",
 ]

@@ -6,25 +6,30 @@ its mesh position, reads the footer index once per TGB (cached), and issues one
 targeted range read per step. No inter-rank communication.
 
 Also implements:
-  * asynchronous prefetch of upcoming slices (hides object-store read latency),
+  * pipelined parallel prefetch of upcoming slices: up to ``prefetch_depth``
+    slice fetches in flight concurrently on a shared ``IOPool`` (hides
+    object-store read latency far better than the old one-at-a-time thread),
+  * coalesced CP-span reads (one vectored ranged GET per step instead of
+    ``span`` sequential round trips),
   * topology remap (§4.1): TP/PP changes are transparent; DP/CP world-size
     changes by an integer factor remap (logical step, rank) -> (tgb step, slice)
     locally with no data rewrite,
   * dense-read baseline mode (fetch full TGB, slice locally) for Fig. 10,
-  * read-amplification accounting.
+  * read-amplification accounting (speculative footer over-reads included).
 """
 from __future__ import annotations
 
-import queue
 import threading
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.errors import BatchTimeout
 from repro.core.manifest import DatasetView, ManifestStore
-from repro.core.objectstore import Namespace, NoSuchKey
+from repro.core.objectstore import IOPool, Namespace, NoSuchKey
 from repro.core.stats import LatencyWindow
-from repro.core.tgb import TGBFooter, TGBReader
+from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TAIL_BYTES, TGBFooter,
+                            TGBReader)
 
 
 @dataclass
@@ -107,7 +112,12 @@ class Consumer:
                  manifests: Optional[ManifestStore] = None,
                  prefetch_depth: int = 4,
                  dense_read: bool = False,
-                 verify_crc: bool = True):
+                 verify_crc: bool = True,
+                 io_pool: Optional[IOPool] = None,
+                 parallel_prefetch: bool = True,
+                 coalesce_reads: bool = True,
+                 speculative_tail: int = SPECULATIVE_TAIL_BYTES,
+                 min_poll_interval_s: float = 0.02):
         self.ns = ns
         self.store = ns.store
         self.clock = self.store.clock
@@ -117,14 +127,37 @@ class Consumer:
         self.step = 0  # next global step S to consume
         self.dense_read = dense_read
         self.verify_crc = verify_crc
+        # I/O path knobs: the defaults are the fast path; benchmarks flip them
+        # off to measure the scalar baseline (serial prefetch, per-chunk GETs,
+        # two-request footer opens).
+        self.parallel_prefetch = parallel_prefetch
+        self.coalesce_reads = coalesce_reads
+        self.speculative_tail = speculative_tail
+        # all TGBs in a run share layout, so after the first footer open the
+        # window shrinks to the observed footer size (+margin) — keeps the
+        # over-read negligible even for small TGBs
+        self._window_hint: Optional[int] = None
+        self.min_poll_interval_s = min_poll_interval_s
+        self._io_pool = io_pool
         self.stats = ConsumerStats()
+        self._stats_lock = threading.Lock()
         self._footers: Dict[str, Tuple[TGBFooter, int]] = {}  # key -> (footer, size)
         self._footer_lock = threading.Lock()
         self.prefetch_depth = prefetch_depth
         self._prefetched: Dict[Tuple[int, int, int], bytes] = {}
+        self._inflight: Dict[Tuple[int, int, int], Future] = {}
         self._prefetch_lock = threading.Lock()
         self._prefetch_thread: Optional[threading.Thread] = None
         self._prefetch_stop = threading.Event()
+        self._last_prefetch_poll = float("-inf")
+
+    @property
+    def io_pool(self) -> IOPool:
+        """The pool carrying this consumer's parallel GETs (process-shared by
+        default so total in-flight requests stay bounded across ranks)."""
+        if self._io_pool is None:
+            self._io_pool = IOPool.default()
+        return self._io_pool
 
     # -- cursor ---------------------------------------------------------------
     @property
@@ -139,6 +172,8 @@ class Consumer:
         self.step = step
         with self._prefetch_lock:
             self._prefetched.clear()
+            # in-flight fetches for the old cursor will still deposit; the
+            # overflow eviction drops anything below the restored cursor
 
     # -- manifest polling -------------------------------------------------------
     def poll(self) -> bool:
@@ -164,7 +199,11 @@ class Consumer:
 
     # -- footer cache ----------------------------------------------------------
     def _reader(self, key: str, size_hint: int) -> TGBReader:
-        r = TGBReader(self.store, key, object_size=size_hint)
+        tail = self.speculative_tail
+        if tail > 0 and self._window_hint is not None:
+            tail = self._window_hint
+        r = TGBReader(self.store, key, object_size=size_hint,
+                      speculative_tail=tail)
         with self._footer_lock:
             cached = self._footers.get(key)
         if cached is not None:
@@ -176,9 +215,19 @@ class Consumer:
         with self._footer_lock:
             if key not in self._footers:
                 self._footers[key] = (footer, reader.size)
+                first = True
+            else:
+                first = False
+        if first:
+            with self._stats_lock:
                 self.stats.footer_reads += 1
-                # footer fetch overhead: tail (16B) + footer bytes
-                self.stats.bytes_fetched += len(footer.to_bytes()) + 16
+                # what the footer open actually fetched (speculative tail
+                # window, or tail + exact footer in scalar mode)
+                self.stats.bytes_fetched += reader.footer_overhead_bytes
+                if self.speculative_tail > 0 and reader.footer_len > 0:
+                    self._window_hint = min(
+                        self.speculative_tail,
+                        reader.footer_len + TAIL_BYTES + 256)
 
     # -- data reads --------------------------------------------------------------
     def _fetch_slice(self, tgb_step: int, d: int, c: int) -> bytes:
@@ -189,11 +238,26 @@ class Consumer:
             self._cache_footer(desc.object_key, reader)
         if self.dense_read:
             blob = reader.read_full()
-            self.stats.bytes_fetched += len(blob)
+            with self._stats_lock:
+                self.stats.bytes_fetched += len(blob)
             off, length, _crc = reader.footer().slice_entry(d, c)
             return blob[off:off + length]
         data = reader.read_slice(d, c, verify=self.verify_crc)
-        self.stats.bytes_fetched += len(data)
+        with self._stats_lock:
+            # window-served reads fetched nothing new (the bytes were already
+            # charged as footer overhead)
+            self.stats.bytes_fetched += reader.last_fetch_bytes
+        return data
+
+    def _fetch_span(self, tgb_step: int, d: int, c: int, span: int) -> bytes:
+        """CP-shrink fast path: the whole span in one coalesced vectored GET."""
+        desc = self.view.tgb_at_step(tgb_step)
+        reader = self._reader(desc.object_key, desc.size_bytes)
+        if reader._footer is None:
+            self._cache_footer(desc.object_key, reader)
+        data = reader.read_slices(d, c, span, verify=self.verify_crc)
+        with self._stats_lock:
+            self.stats.bytes_fetched += reader.last_fetch_bytes
         return data
 
     def next_batch(self, timeout_s: Optional[float] = None) -> bytes:
@@ -205,6 +269,21 @@ class Consumer:
         key3 = (tgb_step, d, c)
         with self._prefetch_lock:
             data = self._prefetched.pop(key3, None)
+            fut = self._inflight.get(key3) if data is None else None
+        if data is None and fut is not None:
+            # a prefetch for exactly this step is in flight: ride it instead
+            # of issuing a duplicate GET — but honor the remaining timeout
+            # budget, and let a failed/slow worker fall through to the
+            # direct fetch below
+            remaining = None
+            if timeout_s is not None:
+                remaining = max(0.0, timeout_s - (self.clock.now() - t0))
+            try:
+                fut.result(timeout=remaining)
+            except Exception:
+                pass
+            with self._prefetch_lock:
+                data = self._prefetched.pop(key3, None)
         if data is not None:
             self.stats.prefetch_hits += 1
         else:
@@ -229,11 +308,14 @@ class Consumer:
         return self.pos.cp_size
 
     def _fetch_and_concat(self, tgb_step: int, d: int, c: int) -> bytes:
-        """Fetch slice (d, c); if CP shrank, fetch this rank's span of chunks."""
+        """Fetch slice (d, c); if CP shrank, fetch this rank's span of chunks
+        (one coalesced vectored GET unless coalescing is disabled)."""
         tgb_cp = self._tgb_cp()
         span = max(1, tgb_cp // self.pos.cp_size) if tgb_cp > self.pos.cp_size else 1
         if span == 1:
             return self._fetch_slice(tgb_step, d, c)
+        if self.coalesce_reads and not self.dense_read:
+            return self._fetch_span(tgb_step, d, c, span)
         parts = [self._fetch_slice(tgb_step, d, c + i) for i in range(span)]
         return b"".join(parts)
 
@@ -278,25 +360,65 @@ class Consumer:
         while len(self._prefetched) > cap:
             self._prefetched.pop(max(self._prefetched))
 
-    def _prefetch_loop(self) -> None:
-        while not self._prefetch_stop.is_set():
-            fetched_any = False
-            base = self.step
-            for ahead in range(self.prefetch_depth):
-                s = base + ahead
-                try:
-                    tgb_step, d, c = remap_step(s, self.pos, self._tgb_dp(),
-                                                self._tgb_cp())
-                except ValueError:
-                    break
-                key3 = (tgb_step, d, c)
-                with self._prefetch_lock:
-                    if key3 in self._prefetched:
-                        continue
+    def _maybe_prefetch_poll(self) -> None:
+        """Rate-limited manifest probe for the prefetch loop: a stalled
+        producer must not turn the prefetcher into a manifest-hammering
+        spin (each poll is a real HEAD/LIST against the store)."""
+        now = self.clock.now()
+        if now - self._last_prefetch_poll < self.min_poll_interval_s:
+            return
+        self._last_prefetch_poll = now
+        self.poll()
+
+    def _prefetch_one(self, key3: Tuple[int, int, int]) -> None:
+        """IOPool worker body: fetch one slice span, deposit, retire. The
+        in-flight entry is retired in a finally so an unexpected error can
+        never wedge a prefetch slot (the step is simply retried later)."""
+        tgb_step, d, c = key3
+        data = None
+        try:
+            data = self._fetch_and_concat(tgb_step, d, c)
+        except (KeyError, NoSuchKey):
+            pass
+        finally:
+            with self._prefetch_lock:
+                self._inflight.pop(key3, None)
+                if data is not None:
+                    self._prefetched[key3] = data
+                    self._evict_overflow()
+
+    def _pump_prefetch(self) -> bool:
+        """One scheduler pass: keep up to ``prefetch_depth`` fetches in
+        flight (parallel mode) or fetch the next missing slice inline
+        (scalar baseline). Returns True if any work was started."""
+        progressed = False
+        base = self.step
+        for ahead in range(self.prefetch_depth):
+            s = base + ahead
+            try:
+                tgb_step, d, c = remap_step(s, self.pos, self._tgb_dp(),
+                                            self._tgb_cp())
+            except ValueError:
+                break
+            key3 = (tgb_step, d, c)
+            with self._prefetch_lock:
+                known = key3 in self._prefetched or key3 in self._inflight
+            if known:
+                continue
+            if self.view.total_steps <= tgb_step:
+                self._maybe_prefetch_poll()
                 if self.view.total_steps <= tgb_step:
-                    self.poll()
-                    if self.view.total_steps <= tgb_step:
+                    break
+            if self.parallel_prefetch:
+                # only this thread inserts into _inflight, so checking
+                # capacity and submitting under one lock section suffices
+                with self._prefetch_lock:
+                    if len(self._inflight) >= self.prefetch_depth:
                         break
+                    self._inflight[key3] = self.io_pool.submit(
+                        self._prefetch_one, key3)
+                progressed = True
+            else:
                 try:
                     data = self._fetch_and_concat(tgb_step, d, c)
                 except (KeyError, NoSuchKey):
@@ -304,6 +426,10 @@ class Consumer:
                 with self._prefetch_lock:
                     self._prefetched[key3] = data
                     self._evict_overflow()
-                fetched_any = True
-            if not fetched_any:
+                progressed = True
+        return progressed
+
+    def _prefetch_loop(self) -> None:
+        while not self._prefetch_stop.is_set():
+            if not self._pump_prefetch():
                 self.clock.sleep(0.005)

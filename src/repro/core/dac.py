@@ -130,7 +130,10 @@ class DACPolicy(CommitPolicy):
 
     name = "dac"
 
-    def __init__(self, config: DACConfig = DACConfig()):
+    def __init__(self, config: Optional[DACConfig] = None):
+        # default must be constructed per instance: a shared `DACConfig()`
+        # default argument would alias one mutable config across every policy
+        config = config if config is not None else DACConfig()
         self.cfg = config
         self.tau_hat = 0.0
         self.gap = 0.0

@@ -24,6 +24,7 @@ Two codecs:
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
@@ -99,6 +100,31 @@ def _unpack_producers(raw: dict) -> Dict[str, ProducerState]:
     return {pid: ProducerState.unpack(row) for pid, row in raw.items()}
 
 
+def _decode_flat_tgbs(rows, doc_base_step: int,
+                      base: Optional[DatasetView]) -> List[TGBDescriptor]:
+    """Incremental flat decode: reuse the base view's already-constructed
+    ``TGBDescriptor`` objects for every row whose global step and ``tgb_id``
+    align with the base (the TGB list is append-only and trim is monotone,
+    so the overlap is a contiguous prefix). Advancing a view then costs
+    O(new entries) Python object construction instead of O(history) —
+    the dominant per-poll cost on long runs."""
+    if base is None or not base.tgbs:
+        return [TGBDescriptor.unpack(r) for r in rows]
+    # row i sits at global step doc_base_step + i; the same step lives at
+    # base.tgbs[i + shift] in the base view (if still in range)
+    shift = doc_base_step - base.base_step
+    base_tgbs = base.tgbs
+    n_base = len(base_tgbs)
+    out: List[TGBDescriptor] = []
+    for i, row in enumerate(rows):
+        j = i + shift
+        if 0 <= j < n_base and base_tgbs[j].tgb_id == row[0]:
+            out.append(base_tgbs[j])
+        else:
+            out.append(TGBDescriptor.unpack(row))
+    return out
+
+
 def encode_flat_manifest(view: DatasetView) -> bytes:
     """Flat manifest: the complete dataset state (paper-faithful)."""
     return msgpack.packb({
@@ -153,7 +179,9 @@ class ManifestStore:
         self.snapshot_every = snapshot_every
         self._cache_lock = threading.Lock()
         self._raw_cache: Dict[int, dict] = {}  # decoded manifest docs (immutable)
-        self._raw_cache_order: List[int] = []
+        # deque: O(1) popleft on eviction (list.pop(0) was O(n) per insert
+        # once the cache reached capacity)
+        self._raw_cache_order: "deque[int]" = deque()
         self._raw_cache_cap = 256
 
     # -- raw access ---------------------------------------------------------
@@ -169,7 +197,7 @@ class ManifestStore:
                 self._raw_cache[version] = doc
                 self._raw_cache_order.append(version)
                 while len(self._raw_cache_order) > self._raw_cache_cap:
-                    old = self._raw_cache_order.pop(0)
+                    old = self._raw_cache_order.popleft()
                     self._raw_cache.pop(old, None)
         return doc
 
@@ -205,9 +233,10 @@ class ManifestStore:
         doc = self.read_doc(version)
         fmt = doc.get("format", MANIFEST_FORMAT_FLAT)
         if fmt == MANIFEST_FORMAT_FLAT:
+            doc_base = doc.get("base_step", 0)
             return DatasetView(
-                version=doc["version"], base_step=doc.get("base_step", 0),
-                tgbs=[TGBDescriptor.unpack(r) for r in doc["tgbs"]],
+                version=doc["version"], base_step=doc_base,
+                tgbs=_decode_flat_tgbs(doc["tgbs"], doc_base, base),
                 producers=_unpack_producers(doc["producers"]),
             )
         # delta format: walk the chain back to base / snapshot.

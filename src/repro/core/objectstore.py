@@ -24,10 +24,16 @@ from __future__ import annotations
 
 import os
 import threading
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.clock import Clock, SystemClock
+
+#: Coalesce ranges whose inter-range gap is at most this many bytes into one
+#: request. 512 KiB ~ the point where re-reading the gap is cheaper than a
+#: second object-store round trip (gap/bandwidth < per-request base latency).
+DEFAULT_COALESCE_GAP = 512 * 1024
 
 
 class ConditionalPutFailed(Exception):
@@ -99,6 +105,9 @@ class StoreStats:
     conditional_put_conflicts: int = 0
     gets: int = 0
     range_gets: int = 0
+    vectored_gets: int = 0      # get_ranges() calls
+    coalesced_requests: int = 0  # physical requests issued by get_ranges()
+    coalesced_ranges: int = 0    # logical ranges served by get_ranges()
     lists: int = 0
     deletes: int = 0
     heads: int = 0
@@ -107,6 +116,39 @@ class StoreStats:
 
     def snapshot(self) -> dict:
         return dict(self.__dict__)
+
+
+def coalesce_ranges(ranges: Sequence[Tuple[int, int]],
+                    gap_threshold: int = DEFAULT_COALESCE_GAP,
+                    ) -> List[Tuple[int, int, List[Tuple[int, int, int]]]]:
+    """Group ``(offset, length)`` ranges whose gaps are <= ``gap_threshold``.
+
+    Returns ``[(group_offset, group_length, members)]`` where each member is
+    ``(original_index, offset, length)``. Groups preserve ascending offset
+    order; members keep their original indices so callers can restore request
+    order. Overlapping/duplicate ranges coalesce naturally (gap < 0).
+    """
+    if not ranges:
+        return []
+    order = sorted(range(len(ranges)), key=lambda i: ranges[i][0])
+    groups: List[Tuple[int, int, List[Tuple[int, int, int]]]] = []
+    g_off, g_end = None, None
+    members: List[Tuple[int, int, int]] = []
+    for i in order:
+        off, length = ranges[i]
+        if length < 0 or off < 0:
+            raise ValueError(f"bad range ({off}, {length})")
+        if g_off is None:
+            g_off, g_end, members = off, off + length, [(i, off, length)]
+            continue
+        if off - g_end <= gap_threshold:
+            members.append((i, off, length))
+            g_end = max(g_end, off + length)
+        else:
+            groups.append((g_off, g_end - g_off, members))
+            g_off, g_end, members = off, off + length, [(i, off, length)]
+    groups.append((g_off, g_end - g_off, members))
+    return groups
 
 
 class FaultInjector:
@@ -201,6 +243,39 @@ class ObjectStore:
             self.stats.bytes_read += len(data)
         self._post("get_range", key)
         return data
+
+    def get_ranges(self, key: str, ranges: Sequence[Tuple[int, int]],
+                   gap_threshold: int = DEFAULT_COALESCE_GAP) -> List[memoryview]:
+        """Vectored ranged GET: fetch many ``(offset, length)`` ranges of one
+        object, coalescing adjacent/near ranges (gap <= ``gap_threshold``) into
+        a single request each.
+
+        Latency is charged **once per coalesced request** — this is the whole
+        point: ``span`` adjacent slice reads cost one round trip instead of
+        ``span``. Returns zero-copy ``memoryview`` slices over each request's
+        buffer, in the order of the input ``ranges``. Gap bytes that were
+        fetched only to bridge ranges are counted in ``bytes_read`` (they went
+        over the wire).
+        """
+        self._pre("get_ranges", key)
+        out: List[Optional[memoryview]] = [None] * len(ranges)
+        groups = coalesce_ranges(ranges, gap_threshold)
+        fetched = 0
+        for g_off, g_len, members in groups:
+            data = self._do_get_range(key, g_off, g_len)
+            self.clock.sleep(self.latency.get_delay(len(data)))
+            fetched += len(data)
+            view = memoryview(data)
+            for idx, off, length in members:
+                out[idx] = view[off - g_off:off - g_off + length]
+        with self._stats_lock:
+            self.stats.vectored_gets += 1
+            self.stats.coalesced_requests += len(groups)
+            self.stats.coalesced_ranges += len(ranges)
+            self.stats.range_gets += len(groups)
+            self.stats.bytes_read += fetched
+        self._post("get_ranges", key)
+        return out  # type: ignore[return-value]
 
     def head(self, key: str) -> int:
         """Return object size; raises NoSuchKey."""
@@ -420,6 +495,53 @@ class FileObjectStore(ObjectStore):
                 except OSError:
                     pass
         return total
+
+
+class IOPool:
+    """Bounded executor for parallel object-store GETs.
+
+    One pool is meant to be **shared** across all consumer clients of a
+    process (every rank's prefetcher, every stream of a MixedReader) so the
+    total number of in-flight object-store requests stays bounded no matter
+    how many readers exist. Against the latency model this matters because
+    each GET sleeps for its modeled round trip: overlapping those sleeps on
+    pool threads is exactly how a real S3 client hides per-request latency.
+    """
+
+    _default: Optional["IOPool"] = None
+    _default_lock = threading.Lock()
+
+    def __init__(self, max_workers: int = 8, name: str = "bw-io"):
+        if max_workers < 1:
+            raise ValueError("IOPool needs at least one worker")
+        self.max_workers = max_workers
+        self._exec = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix=name)
+        self.submitted = 0
+        self._lock = threading.Lock()
+
+    @classmethod
+    def default(cls) -> "IOPool":
+        """Process-wide shared pool (lazily created, never shut down)."""
+        with cls._default_lock:
+            if cls._default is None:
+                cls._default = IOPool()
+            return cls._default
+
+    def submit(self, fn: Callable, *args, **kw) -> Future:
+        with self._lock:
+            self.submitted += 1
+        return self._exec.submit(fn, *args, **kw)
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._exec.shutdown(wait=wait)
+
+    def __enter__(self) -> "IOPool":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.shutdown()
+        return False
 
 
 class Namespace:

@@ -16,13 +16,14 @@ from __future__ import annotations
 
 import threading
 import uuid
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 from repro.core.commit import CommitProtocol
 from repro.core.dac import CommitPolicy, DACPolicy
 from repro.core.manifest import ManifestStore
-from repro.core.objectstore import Namespace
+from repro.core.objectstore import IOPool, Namespace
 from repro.core.tgb import TGBBuilder, TGBDescriptor, build_uniform_tgb
 
 
@@ -53,7 +54,9 @@ class Producer:
                  policy: Optional[CommitPolicy] = None,
                  manifests: Optional[ManifestStore] = None,
                  max_lag: Optional[int] = None,
-                 epoch: int = 0):
+                 epoch: int = 0,
+                 pipeline_commits: bool = False,
+                 io_pool: Optional[IOPool] = None):
         self.ns = ns
         self.store = ns.store
         self.clock = self.store.clock
@@ -69,6 +72,21 @@ class Producer:
         self.next_offset = 0
         # TGBs written to the store but not yet visible in a committed manifest
         self.pending: List[TGBDescriptor] = []
+        # Commit pipelining: run the manifest conditional-put on a pool thread
+        # so the next TGB builds/uploads while it is in flight. Cadence (DAC
+        # gap) semantics are unchanged: the policy is still fed each attempt's
+        # outcome at its completion time, and at most one attempt is ever in
+        # flight.
+        self.pipeline_commits = pipeline_commits
+        self._io_pool = io_pool
+        self._commit_future: Optional[Future] = None
+        self._commit_lock = threading.Lock()
+
+    @property
+    def io_pool(self) -> IOPool:
+        if self._io_pool is None:
+            self._io_pool = IOPool.default()
+        return self._io_pool
 
     # ------------------------------------------------------------------
     def recover(self) -> int:
@@ -118,30 +136,62 @@ class Producer:
     # ------------------------------------------------------------------
     def maybe_commit(self, trim_to_step: Optional[int] = None, force: bool = False) -> bool:
         """Attempt a commit if the policy's cadence allows. Returns True iff a
-        commit attempt happened and succeeded."""
+        commit attempt completed successfully during this call (in pipelined
+        mode a freshly scheduled attempt reports on a later call)."""
+        if self.pipeline_commits:
+            return self._maybe_commit_pipelined(trim_to_step, force)
+        return self._commit_sync(self.pending, trim_to_step, force)
+
+    def _commit_sync(self, batch: List[TGBDescriptor],
+                     trim_to_step: Optional[int], force: bool) -> bool:
         now = self.clock.now()
-        if not force and not self.policy.should_attempt(len(self.pending), now):
+        if not force and not self.policy.should_attempt(len(batch), now):
             return False
-        if not self.pending:
+        if not batch:
             return False
         result, still_pending = self.protocol.try_commit(
-            self.pending, trim_to_step=trim_to_step)
-        self.stats.commit_attempts += 1
-        self.stats.tau_sum += result.tau_obs
-        self.stats.manifest_bytes_written += result.manifest_bytes
-        if result.success:
-            self.stats.commit_successes += 1
-            self.stats.tgbs_committed += result.committed_tgbs
-            self.stats.bytes_committed += sum(t.size_bytes for t in self.pending)
-            self.pending = []
-        else:
-            self.stats.commit_conflicts += 1
-            self.pending = still_pending
-        self.policy.on_outcome(result.success, result.tau_obs,
-                               result.n_producers, self.clock.now())
-        if isinstance(self.policy, DACPolicy):
-            self.stats.gap_samples.append(self.policy.gap)
+            batch, trim_to_step=trim_to_step)
+        with self._commit_lock:
+            self.stats.commit_attempts += 1
+            self.stats.tau_sum += result.tau_obs
+            self.stats.manifest_bytes_written += result.manifest_bytes
+            if result.success:
+                self.stats.commit_successes += 1
+                self.stats.tgbs_committed += result.committed_tgbs
+                self.stats.bytes_committed += sum(t.size_bytes for t in batch)
+                if batch is self.pending:
+                    self.pending = []
+            else:
+                self.stats.commit_conflicts += 1
+                if batch is self.pending:
+                    self.pending = still_pending
+                else:  # pipelined snapshot: re-queue ahead of newer TGBs
+                    self.pending[:0] = still_pending
+            self.policy.on_outcome(result.success, result.tau_obs,
+                                   result.n_producers, self.clock.now())
+            if isinstance(self.policy, DACPolicy):
+                self.stats.gap_samples.append(self.policy.gap)
         return result.success
+
+    def _maybe_commit_pipelined(self, trim_to_step: Optional[int],
+                                force: bool) -> bool:
+        """Schedule the conditional-put on the IOPool and return immediately;
+        TGB build/upload for the next batch overlaps the in-flight commit."""
+        reaped = False
+        fut = self._commit_future
+        if fut is not None:
+            if not force and not fut.done():
+                return False  # one attempt in flight; keep producing
+            reaped = bool(fut.result())  # force waits for the in-flight put
+            self._commit_future = None
+        if force:
+            return self._commit_sync(self.pending, trim_to_step, True) or reaped
+        if self.pending and self.policy.should_attempt(len(self.pending),
+                                                       self.clock.now()):
+            batch, self.pending = self.pending, []
+            self._commit_future = self.io_pool.submit(
+                self._commit_sync, batch, trim_to_step, True)
+        return reaped
 
     def finalize(self, max_attempts: int = 1000) -> None:
         """Drain remaining uncommitted TGBs before exiting (Alg. 1 finalization)."""

@@ -21,7 +21,7 @@ from repro.core.consumer import Consumer, MeshPosition
 from repro.core.dac import CommitPolicy
 from repro.core.lifecycle import Reclaimer, Watermark, write_watermark
 from repro.core.manifest import ManifestStore
-from repro.core.objectstore import Namespace, ObjectStore
+from repro.core.objectstore import IOPool, Namespace, ObjectStore
 from repro.core.producer import Producer
 from repro.dataplane._base import PackingWriterMixin, SessionBase
 from repro.dataplane.types import Batch, Checkpoint, Topology
@@ -32,12 +32,16 @@ class TGBWriter(PackingWriterMixin):
 
     def __init__(self, ns: Namespace, topology: Topology, writer_id: str,
                  policy: Optional[CommitPolicy] = None,
-                 max_lag: Optional[int] = None):
+                 max_lag: Optional[int] = None,
+                 pipeline_commits: bool = False,
+                 io_pool: Optional[IOPool] = None):
         self.topology = topology
         self.writer_id = writer_id
         self.producer = Producer(ns, writer_id, dp=topology.dp, cp=topology.cp,
                                  policy=policy, manifests=ManifestStore(ns),
-                                 max_lag=max_lag)
+                                 max_lag=max_lag,
+                                 pipeline_commits=pipeline_commits,
+                                 io_pool=io_pool)
         self.recovered_offset = 0
 
     # -- lifecycle -----------------------------------------------------------
@@ -84,12 +88,13 @@ class TGBBatchReader:
     def __init__(self, ns: Namespace, topology: Topology, dp_rank: int,
                  cp_rank: int, prefetch_depth: int = 4,
                  dense_read: bool = False, verify_crc: bool = True,
+                 io_pool: Optional[IOPool] = None,
                  resume: "Checkpoint | str | None" = None):
         self.topology = topology
         self.consumer = Consumer(
             ns, MeshPosition(dp_rank, cp_rank, topology.dp, topology.cp),
             prefetch_depth=prefetch_depth, dense_read=dense_read,
-            verify_crc=verify_crc)
+            verify_crc=verify_crc, io_pool=io_pool)
         self.dp_rank, self.cp_rank = dp_rank, cp_rank
         ckpt = Checkpoint.coerce(resume)
         if ckpt is not None:
@@ -147,13 +152,17 @@ class TGBSession(SessionBase):
     def __init__(self, store: ObjectStore, topology: Topology, *,
                  namespace: str = "runs/dataplane",
                  resume: "Checkpoint | str | None" = None,
-                 expected_ranks: Optional[int] = None):
+                 expected_ranks: Optional[int] = None,
+                 io_pool: Optional[IOPool] = None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
         self.store = store
         self.topology = topology
         self.ns = Namespace(store, namespace)
+        # one pool per session: all of this session's readers/writers share
+        # its bounded in-flight request budget (None -> the process default)
+        self._io_pool = io_pool
         self._resume = Checkpoint.coerce(resume)
         self._expected_ranks = expected_ranks or topology.world
         self._reclaimer: Optional[Reclaimer] = None
@@ -162,9 +171,11 @@ class TGBSession(SessionBase):
     # -- clients -------------------------------------------------------------
     def writer(self, writer_id: str = "w0", *,
                policy: Optional[CommitPolicy] = None,
-               max_lag: Optional[int] = None) -> TGBWriter:
+               max_lag: Optional[int] = None,
+               pipeline_commits: bool = False) -> TGBWriter:
         return TGBWriter(self.ns, self.topology, writer_id, policy=policy,
-                         max_lag=max_lag)
+                         max_lag=max_lag, pipeline_commits=pipeline_commits,
+                         io_pool=self._io_pool)
 
     def reader(self, dp_rank: int = 0, cp_rank: int = 0, *,
                prefetch_depth: int = 4, dense_read: bool = False,
@@ -173,6 +184,7 @@ class TGBSession(SessionBase):
         r = TGBBatchReader(self.ns, self.topology, dp_rank, cp_rank,
                            prefetch_depth=prefetch_depth,
                            dense_read=dense_read, verify_crc=verify_crc,
+                           io_pool=self._io_pool,
                            resume=resume if resume is not None
                            else self._resume)
         self._readers.append(r)

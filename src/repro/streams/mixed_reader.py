@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from typing import Dict, Mapping, Optional
 
-from repro.core.objectstore import Namespace
+from repro.core.objectstore import IOPool, Namespace
 from repro.dataplane.tgb_backend import TGBBatchReader
 from repro.dataplane.types import Batch, Checkpoint, Topology
 from repro.streams.mixplan import MixPlan
@@ -32,16 +32,21 @@ class MixedReader:
                  topology: Topology, dp_rank: int, cp_rank: int, *,
                  prefetch_depth: int = 4, dense_read: bool = False,
                  verify_crc: bool = True,
+                 io_pool: Optional[IOPool] = None,
                  resume: "Checkpoint | str | None" = None):
         self.plan = plan
         self.topology = topology
         self.dp_rank, self.cp_rank = dp_rank, cp_rank
+        # one IOPool shared by every stream's consumer: N streams multiplex
+        # one bounded in-flight request budget instead of N independent ones
+        self.io_pool = io_pool or IOPool.default()
         self._subs: Dict[str, TGBBatchReader] = {
             name: TGBBatchReader(stream_namespaces[name], topology,
                                  dp_rank, cp_rank,
                                  prefetch_depth=prefetch_depth,
                                  dense_read=dense_read,
-                                 verify_crc=verify_crc)
+                                 verify_crc=verify_crc,
+                                 io_pool=self.io_pool)
             for name in plan.names
         }
         self.global_step = 0  # next mixed step this reader will return

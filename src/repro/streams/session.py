@@ -23,7 +23,7 @@ from __future__ import annotations
 from typing import Dict, List, Mapping, Optional
 
 from repro.core.dac import CommitPolicy
-from repro.core.objectstore import Namespace, ObjectStore
+from repro.core.objectstore import IOPool, Namespace, ObjectStore
 from repro.dataplane._base import SessionBase
 from repro.dataplane.tgb_backend import TGBWriter
 from repro.dataplane.types import Checkpoint, Topology
@@ -43,7 +43,8 @@ class MultiStreamSession(SessionBase):
                  streams: Mapping[str, float], mix_seed: int = 0,
                  namespace: str = "runs/dataplane",
                  resume: "Checkpoint | str | None" = None,
-                 expected_ranks: Optional[int] = None):
+                 expected_ranks: Optional[int] = None,
+                 io_pool: Optional[IOPool] = None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
@@ -58,6 +59,7 @@ class MultiStreamSession(SessionBase):
                          self._expected_ranks)
             for name in self.plan.names
         }
+        self._io_pool = io_pool  # shared across every reader's streams
         self._resume = Checkpoint.coerce(resume)
         if self._resume is not None and not self._resume.composite:
             raise ValueError("multi-stream session needs a composite "
@@ -73,14 +75,17 @@ class MultiStreamSession(SessionBase):
 
     def writer(self, writer_id: str = "w0", *, stream: Optional[str] = None,
                policy: Optional[CommitPolicy] = None,
-               max_lag: Optional[int] = None) -> TGBWriter:
+               max_lag: Optional[int] = None,
+               pipeline_commits: bool = False) -> TGBWriter:
         """A producer handle bound to one named stream."""
         if stream is None or stream not in self.streams:
             raise ValueError(
                 f"multi-stream writer needs stream=<name>; available: "
                 f"{', '.join(self.plan.names)} (got {stream!r})")
         return TGBWriter(self.streams[stream].ns, self.topology, writer_id,
-                         policy=policy, max_lag=max_lag)
+                         policy=policy, max_lag=max_lag,
+                         pipeline_commits=pipeline_commits,
+                         io_pool=self._io_pool)
 
     def reader(self, dp_rank: int = 0, cp_rank: int = 0, *,
                prefetch_depth: int = 4, dense_read: bool = False,
@@ -90,7 +95,7 @@ class MultiStreamSession(SessionBase):
                         {name: s.ns for name, s in self.streams.items()},
                         self.topology, dp_rank, cp_rank,
                         prefetch_depth=prefetch_depth, dense_read=dense_read,
-                        verify_crc=verify_crc,
+                        verify_crc=verify_crc, io_pool=self._io_pool,
                         resume=resume if resume is not None else self._resume)
         self._readers.append(r)
         return r

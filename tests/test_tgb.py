@@ -57,6 +57,17 @@ def test_footer_cache_avoids_rereads(store):
     gets_before = store.stats.range_gets
     r.footer()
     r.read_slice(0, 0)
+    # small TGB: the retained speculative-tail window already covers the
+    # slice, so the read is served zero-copy with no extra request
+    assert store.stats.range_gets == gets_before
+
+    big = _put(store, build_uniform_tgb("t2", 2, 1, "p", 0, 64 * 1024),
+               key="t/big.tgb")
+    r2 = TGBReader(store, big)
+    r2.footer()
+    gets_before = store.stats.range_gets
+    r2.footer()
+    r2.read_slice(0, 0)
     assert store.stats.range_gets == gets_before + 1  # only the slice read
 
 
