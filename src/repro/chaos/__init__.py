@@ -1,0 +1,26 @@
+"""``repro.chaos`` — the failure-isolation chaos harness.
+
+Scripted kill/restart scenarios at named protocol points (pre-commit,
+post-upload-pre-manifest, mid-step, mid-trim, conflict storm, flaky reads)
+that assert BatchWeave's §5 guarantees hold through recovery: exactly-once
+delivery, atomic all-rank visibility, and no unaccounted storage after an
+``repro.ops`` fsck/repair.
+
+Usage::
+
+    from repro.chaos import run_all, run_scenario
+    results = run_all()                      # every registered scenario
+    r = run_scenario("producer_precommit_kill")
+    assert r.passed
+
+CLI::
+
+    python -m repro.chaos                    # run all, table output
+    python -m repro.chaos --only producer_precommit_kill   # CI smoke
+"""
+from repro.chaos.harness import (SCENARIOS, ScenarioResult, run_all,
+                                 run_scenario, scenario)
+from repro.chaos import scenarios as _scenarios  # noqa: F401 — registers all
+
+__all__ = ["SCENARIOS", "ScenarioResult", "run_all", "run_scenario",
+           "scenario"]

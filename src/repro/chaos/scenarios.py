@@ -1,0 +1,302 @@
+"""Named kill/restart scenarios at the protocol points that matter.
+
+Each scenario kills (or degrades) exactly one component at a named point in
+the commit/read/reclaim protocol, recovers it the way an operator would, and
+asserts the §5 guarantees: exactly-once delivery, atomic all-rank
+visibility, and a clean ``fsck`` after repair. See ``harness.py`` for the
+shared machinery and ``docs/OPERATIONS.md`` for the matching playbooks.
+
+Protocol points covered:
+
+  producer_precommit_kill        crash *before* the conditional manifest put
+  producer_post_upload_kill      crash after a TGB upload, before its commit
+  consumer_midstep_kill          reader dies past its last checkpoint
+  mixed_reader_midstep_kill      same, across weighted multi-stream mixing
+  reclaimer_midtrim_kill         reclaimer dies halfway through deletion
+  cput_conflict_storm            3 producers × injected 5xx/lost-ack commits
+  flaky_reads                    consumer under 5xx / short / stale reads
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.core import (Consumer, FaultPolicy, FaultyObjectStore,
+                        InjectedCrash, ManifestStore, MemoryObjectStore,
+                        MeshPosition, Namespace, Producer, Reclaimer,
+                        Watermark, write_watermark)
+from repro.chaos.harness import (CHAOS_PREFIX, ScenarioResult,
+                                 assert_all_ranks_converge,
+                                 assert_exactly_once, audit_and_repair,
+                                 deterministic_payload, drain, fresh_ns,
+                                 latest_view, make_slices, now, produce_range,
+                                 reader, scenario)
+from repro.ops import fsck
+
+N_TGBS = 10
+
+
+def _killed_producer_run(ns: Namespace, crash_op: str, crash_sub: str,
+                         nth: int, phase: str, dp: int = 2) -> None:
+    """Drive a producer into an injected crash at the named protocol point."""
+    ns.store.faults.crash_on(crash_op, key_substr=crash_sub, nth=nth,
+                             phase=phase)
+    p = Producer(ns, "P", dp=dp, cp=1)
+    p.recover()
+    try:
+        produce_range(p, N_TGBS)
+    except InjectedCrash:
+        return
+    raise AssertionError(f"crash rule ({crash_op}, {crash_sub!r}, nth={nth}, "
+                         f"{phase}) never fired")
+
+
+def _recover_and_verify(ns: Namespace, name: str, dp: int = 2
+                        ) -> ScenarioResult:
+    """Shared back half of the producer-kill scenarios: replace the producer,
+    resume from durable state, and check every guarantee."""
+    ns.store.faults = None  # the kill happened; the replacement runs clean
+    t0 = now()
+    replacement = Producer(ns, "P", dp=dp, cp=1, epoch=1)
+    resume = replacement.recover()
+    assert resume >= 0, "recover() must yield a resumable offset"
+    produce_range(replacement, N_TGBS)
+    recovery_latency = now() - t0
+
+    # exactly-once, per rank, byte-identical payloads
+    consumers = [reader(ns, d, 0, dp, 1) for d in range(dp)]
+    for d, cons in enumerate(consumers):
+        assert_exactly_once(drain(cons, N_TGBS), "P", d, 0, N_TGBS)
+    assert_all_ranks_converge(consumers)
+
+    # the crashed incarnation's uncommitted TGB must surface as a safe
+    # orphan, and the namespace must audit clean once repaired
+    orphans, clean = audit_and_repair(ns)
+    assert orphans >= 1, "expected the killed incarnation to leave an orphan"
+    assert clean, "fsck not clean after repair"
+    return ScenarioResult(name=name, passed=True,
+                          steps_delivered=N_TGBS * dp,
+                          recovery_latency_s=recovery_latency,
+                          orphans_detected=orphans, fsck_clean_after=True)
+
+
+@scenario("producer_precommit_kill")
+def producer_precommit_kill(seed: int = 0) -> ScenarioResult:
+    """Kill the producer right before its 3rd conditional manifest put: two
+    offsets are durable, one TGB is uploaded but unpublished."""
+    ns = fresh_ns()
+    _killed_producer_run(ns, "cput", ".manifest", nth=3, phase="before")
+    return _recover_and_verify(ns, "producer_precommit_kill")
+
+
+@scenario("producer_post_upload_kill")
+def producer_post_upload_kill(seed: int = 0) -> ScenarioResult:
+    """Kill the producer right after its 4th TGB upload (post-upload,
+    pre-manifest): the object exists but no manifest ever names it."""
+    ns = fresh_ns()
+    _killed_producer_run(ns, "put", "/tgb/", nth=4, phase="after")
+    return _recover_and_verify(ns, "producer_post_upload_kill")
+
+
+@scenario("consumer_midstep_kill")
+def consumer_midstep_kill(seed: int = 0) -> ScenarioResult:
+    """Kill a reader two steps past its last checkpoint; a replacement
+    restores the <V, S> cursor and replays the lost window byte-identically
+    (exactly-once relative to checkpointed training state)."""
+    ns = fresh_ns()
+    p = Producer(ns, "P", dp=1, cp=1)
+    produce_range(p, 12)
+    cons = reader(ns, 0, 0, 1, 1)
+    seen = drain(cons, 5)
+    v, s = cons.cursor                       # checkpointed at step 5
+    lost = drain(cons, 2)                    # consumed past the checkpoint...
+    del cons                                 # ...then killed
+    t0 = now()
+    cons2 = reader(ns, 0, 0, 1, 1)
+    cons2.restore_cursor(v, s)
+    replay = drain(cons2, 7)
+    recovery_latency = now() - t0
+    assert replay[:2] == lost, "post-checkpoint window did not replay " \
+                               "byte-identically"
+    assert_exactly_once(seen + replay, "P", 0, 0, 12)
+    report = fsck(ns)
+    assert report.clean, report.summary()
+    return ScenarioResult(name="consumer_midstep_kill", passed=True,
+                          steps_delivered=12,
+                          recovery_latency_s=recovery_latency,
+                          fsck_clean_after=True)
+
+
+@scenario("mixed_reader_midstep_kill")
+def mixed_reader_midstep_kill(seed: int = 0) -> ScenarioResult:
+    """Kill a multi-stream MixedReader mid-step; a replacement restores the
+    composite checkpoint (mix position + every stream's cursor) and the
+    deterministic schedule replays identically."""
+    from repro.dataplane import Topology, open_dataplane
+
+    store = MemoryObjectStore()
+    session = open_dataplane(store, Topology(dp=1, cp=1), backend="tgb",
+                             namespace=CHAOS_PREFIX,
+                             streams={"a": 2.0, "b": 1.0}, mix_seed=seed)
+    total = 12
+    counts = session.plan.stream_counts(total)
+    for name in session.stream_names:
+        with session.writer(f"w-{name}", stream=name) as w:
+            for off in range(counts[name]):
+                w.write(slices={(0, 0): deterministic_payload(name, off)})
+    expected = []
+    for g in range(total):
+        name, s_step = session.plan.position(g)
+        expected.append(deterministic_payload(name, s_step))
+
+    r = session.reader()
+    seen = [r.next_batch(timeout_s=10.0) for _ in range(5)]
+    token = r.checkpoint()                   # composite: mix pos + cursors
+    lost = [r.next_batch(timeout_s=10.0) for _ in range(2)]
+    r.close()                                # killed mid-step
+    t0 = now()
+    r2 = session.reader(resume=token)
+    replay = [r2.next_batch(timeout_s=10.0) for _ in range(total - 5)]
+    recovery_latency = now() - t0
+    got = [b.payload for b in seen + replay]
+    assert [b.payload for b in replay[:2]] == [b.payload for b in lost], \
+        "post-checkpoint mixed window did not replay identically"
+    assert got == expected, "mixed exactly-once violated (payload mismatch)"
+    sched = [session.plan.position(g)[0] for g in range(total)]
+    assert [b.stream for b in seen + replay] == sched, \
+        "stream routing diverged from the deterministic schedule"
+    report = fsck(Namespace(store, CHAOS_PREFIX))
+    assert report.clean, report.summary()
+    session.close()
+    return ScenarioResult(name="mixed_reader_midstep_kill", passed=True,
+                          steps_delivered=total,
+                          recovery_latency_s=recovery_latency,
+                          fsck_clean_after=True)
+
+
+@scenario("reclaimer_midtrim_kill")
+def reclaimer_midtrim_kill(seed: int = 0) -> ScenarioResult:
+    """Kill the reclaimer halfway through physical deletion; a restarted
+    reclaimer completes idempotently and every checkpoint-needed step
+    survives."""
+    ns = fresh_ns()
+    p = Producer(ns, "P", dp=1, cp=1)
+    produce_range(p, 12)
+    v_latest = ManifestStore(ns).latest_version()
+    write_watermark(ns, 0, Watermark(version=v_latest, step=8))
+    ns.store.faults.crash_on("delete", "/tgb/", nth=3)
+    crashed = False
+    try:
+        Reclaimer(ns, expected_ranks=1).run_cycle()
+    except InjectedCrash:
+        crashed = True
+    assert crashed, "delete crash rule never fired"
+    ns.store.faults = None
+    t0 = now()
+    r2 = Reclaimer(ns, expected_ranks=1)
+    r2.run_cycle()
+    recovery_latency = now() - t0
+    # steps >= 8 survive and replay exactly from the checkpoint cursor
+    cons = reader(ns, 0, 0, 1, 1)
+    cons.restore_cursor(v_latest, 8)
+    got = drain(cons, 4)
+    want = [deterministic_payload("P", off, 0, 0) for off in range(8, 12)]
+    assert got == want, "checkpoint-needed steps were damaged by the trim"
+    # everything below the watermark is gone (both cycles together)
+    remaining = ns.store.list(ns.key("tgb"))
+    assert len(remaining) == 4, f"expected 4 surviving TGBs, found " \
+                                f"{len(remaining)}"
+    report = fsck(ns)
+    assert report.clean, report.summary()
+    return ScenarioResult(name="reclaimer_midtrim_kill", passed=True,
+                          steps_delivered=4,
+                          recovery_latency_s=recovery_latency,
+                          fsck_clean_after=True)
+
+
+@scenario("cput_conflict_storm")
+def cput_conflict_storm(seed: int = 0) -> ScenarioResult:
+    """Three producers force-committing every TGB while the store injects
+    conditional-put 5xx — 60% of them *lost acks* (the put landed before the
+    'failure'). The rebase + ambiguity-resolution machinery must keep every
+    stream gap-free and duplicate-free."""
+    inner = MemoryObjectStore()
+    store = FaultyObjectStore(inner, FaultPolicy(
+        seed=seed, cput_error_rate=0.3, cput_lost_ack_rate=0.6,
+        key_filter=".manifest", max_faults=24))
+    ns = Namespace(store, CHAOS_PREFIX)
+    n_producers, per = 3, 6
+    producers = [Producer(ns, f"P{i}", dp=1, cp=1) for i in range(n_producers)]
+    errs = []
+
+    def body(p: Producer):
+        try:
+            produce_range(p, per)
+        except Exception as e:  # surfaced after join
+            errs.append((p.producer_id, e))
+
+    t0 = now()
+    threads = [threading.Thread(target=body, args=(p,)) for p in producers]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    recovery_latency = now() - t0
+    assert not errs, f"producers died in the storm: {errs}"
+
+    clean_ns = Namespace(inner, CHAOS_PREFIX)
+    view = latest_view(clean_ns)
+    for i in range(n_producers):
+        seqs = [t.producer_seq for t in view.tgbs
+                if t.producer_id == f"P{i}"]
+        assert seqs == list(range(per)), \
+            f"P{i} stream corrupted under the storm: {seqs}"
+    # drain everything; per-producer payload order must be exact
+    cons = Consumer(clean_ns, MeshPosition(0, 0, 1, 1))
+    per_pid: dict = {}
+    for _ in range(n_producers * per):
+        payload = cons.next_batch(timeout_s=10.0)
+        pid, off = bytes(payload).split(b"|", 1)[0].decode().split(":")[:2]
+        per_pid.setdefault(pid, []).append((int(off), payload))
+    for i in range(n_producers):
+        pid = f"P{i}"
+        offs = [o for o, _ in per_pid[pid]]
+        assert offs == list(range(per)), f"{pid} delivered {offs}"
+        for off, payload in per_pid[pid]:
+            assert payload == deterministic_payload(pid, off), \
+                f"{pid}@{off} payload corrupted"
+    report = fsck(clean_ns)
+    assert report.clean, report.summary()
+    conflicts = sum(p.stats.commit_conflicts for p in producers)
+    return ScenarioResult(name="cput_conflict_storm", passed=True,
+                          steps_delivered=n_producers * per,
+                          recovery_latency_s=recovery_latency,
+                          faults_injected=store.fault_stats.total,
+                          fsck_clean_after=True,
+                          detail=f"{conflicts} conflicts rebased")
+
+
+@scenario("flaky_reads")
+def flaky_reads(seed: int = 0) -> ScenarioResult:
+    """Consumer survives 5xx, truncated range-GETs, slow reads, and stale
+    windows: bounded retries + CRC verification deliver every batch
+    byte-perfect."""
+    inner = MemoryObjectStore()
+    store = FaultyObjectStore(inner, FaultPolicy(
+        seed=seed, get_error_rate=0.12, short_read_rate=0.12,
+        slow_get_rate=0.1, slow_get_s=0.001, stale_read_rate=0.25,
+        stale_depth=3, max_faults=80))
+    ns = Namespace(store, CHAOS_PREFIX)
+    produce_range(Producer(ns, "P", dp=1, cp=1), N_TGBS)
+    t0 = now()
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1))
+    got = drain(cons, N_TGBS)
+    elapsed = now() - t0
+    assert_exactly_once(got, "P", 0, 0, N_TGBS)
+    report = fsck(Namespace(inner, CHAOS_PREFIX))
+    assert report.clean, report.summary()
+    return ScenarioResult(name="flaky_reads", passed=True,
+                          steps_delivered=N_TGBS,
+                          recovery_latency_s=elapsed,
+                          faults_injected=store.fault_stats.total,
+                          fsck_clean_after=True,
+                          detail=f"{cons.stats.read_retries} read retries")

@@ -9,16 +9,21 @@ Public surface:
   Commit policies        — DACPolicy (paper Alg. 1), Naive/Fixed/Incr/AIMD
   Clients                — Producer, Consumer, MeshPosition
   Lifecycle              — Watermark, Reclaimer, write_watermark, global_watermark
+  Fault injection        — FaultyObjectStore/FaultPolicy (seeded 5xx, lost
+                           acks, slow/partial GETs, stale reads) and
+                           FaultInjector (crash at the Nth matching op)
 """
 from repro.core.clock import Clock, SystemClock, VirtualClock
 from repro.core.commit import CommitProtocol, CommitResult
-from repro.core.errors import BatchTimeout
+from repro.core.errors import BatchTimeout, TransientStoreError
 from repro.core.consumer import Consumer, ConsumerStats, MeshPosition, remap_step
+from repro.core.faults import FaultPolicy, FaultStats, FaultyObjectStore
 from repro.core.dac import (AIMDPolicy, CommitPolicy, DACConfig, DACPolicy,
                             FixedCountPolicy, IncrPolicy, NaivePolicy,
                             make_policy)
 from repro.core.lifecycle import (Reclaimer, Watermark, global_watermark,
-                                  read_watermarks, write_watermark)
+                                  read_trim_marker, read_watermarks,
+                                  write_watermark)
 from repro.core.manifest import (DatasetView, ManifestStore, ProducerState,
                                  MANIFEST_FORMAT_DELTA, MANIFEST_FORMAT_FLAT)
 from repro.core.objectstore import (ConditionalPutFailed, DEFAULT_COALESCE_GAP,
@@ -32,14 +37,15 @@ from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TGBBuilder, TGBDescriptor,
                             TGBFooter, TGBReader)
 
 __all__ = [
-    "BatchTimeout",
+    "BatchTimeout", "TransientStoreError",
     "Clock", "SystemClock", "VirtualClock",
+    "FaultPolicy", "FaultStats", "FaultyObjectStore",
     "CommitProtocol", "CommitResult",
     "Consumer", "ConsumerStats", "MeshPosition", "remap_step",
     "AIMDPolicy", "CommitPolicy", "DACConfig", "DACPolicy", "FixedCountPolicy",
     "IncrPolicy", "NaivePolicy", "make_policy",
-    "Reclaimer", "Watermark", "global_watermark", "read_watermarks",
-    "write_watermark",
+    "Reclaimer", "Watermark", "global_watermark", "read_trim_marker",
+    "read_watermarks", "write_watermark",
     "DatasetView", "ManifestStore", "ProducerState",
     "MANIFEST_FORMAT_DELTA", "MANIFEST_FORMAT_FLAT",
     "ConditionalPutFailed", "DEFAULT_COALESCE_GAP", "FaultInjector",

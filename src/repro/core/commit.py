@@ -12,11 +12,12 @@ Version numbers are strictly monotone and never reused: no ABA hazard.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
+from repro.core.errors import TransientStoreError, retry_transient
 from repro.core.manifest import (DatasetView, ManifestStore, ProducerState)
+from repro.core.objectstore import NoSuchKey
 from repro.core.tgb import TGBDescriptor
 
 
@@ -33,6 +34,9 @@ class CommitResult:
 class CommitProtocol:
     """Stateful commit client for one producer."""
 
+    #: bounded retry budget for control-plane reads hit by transient faults
+    READ_RETRIES = 4
+
     def __init__(self, manifests: ManifestStore, producer_id: str, epoch: int = 0):
         self.manifests = manifests
         self.producer_id = producer_id
@@ -41,11 +45,21 @@ class CommitProtocol:
         self.clock = manifests.store.clock
 
     # ------------------------------------------------------------------
+    def _retrying(self, fn: Callable):
+        """Run a read-only storage closure, retrying transient store errors
+        and stale-read misses (a NoSuchKey for a version the probe just saw)
+        with short backoff. Reads are idempotent, so this never changes
+        protocol semantics — it only rides out 5xx/staleness windows."""
+        return retry_transient(fn, self.clock, attempts=self.READ_RETRIES,
+                               retry_on=(TransientStoreError, NoSuchKey))
+
     def refresh(self) -> DatasetView:
         """Catch up the local view to the latest committed manifest."""
-        latest = self.manifests.latest_version(hint=self.view.version)
+        latest = self._retrying(
+            lambda: self.manifests.latest_version(hint=self.view.version))
         if latest > self.view.version:
-            self.view = self.manifests.load_view(latest, base=self.view)
+            self.view = self._retrying(
+                lambda: self.manifests.load_view(latest, base=self.view))
         return self.view
 
     def _dedup_pending(self, pending: List[TGBDescriptor]) -> List[TGBDescriptor]:
@@ -82,11 +96,15 @@ class CommitProtocol:
             epoch=self.epoch)
         version, raw = self.manifests.encode_candidate(
             self.view, pending, producers, trim_to_step=trim_to_step)
-        ok = self.manifests.try_put_version(version, raw)
+        try:
+            ok = self.manifests.try_put_version(version, raw)
+        except TransientStoreError:
+            ok = self._resolve_ambiguous_put(version, new_offset)
         tau = self.clock.now() - t0
         if ok:
             # our candidate is now the authoritative state: update local view
-            self.view = self.manifests.load_view(version, base=self.view)
+            self.view = self._retrying(
+                lambda: self.manifests.load_view(version, base=self.view))
             return (CommitResult(True, version, tau, max(1, len(self.view.producers)),
                                  committed_tgbs=len(pending),
                                  manifest_bytes=len(raw)), [])
@@ -96,6 +114,42 @@ class CommitProtocol:
         return (CommitResult(False, self.view.version, tau,
                              max(1, len(self.view.producers)),
                              manifest_bytes=len(raw)), still)
+
+    def _resolve_ambiguous_put(self, version: int, new_offset: int) -> bool:
+        """A conditional put raised a transient error: the write may or may
+        not have landed (lost ack). The version object is immutable once
+        named, so re-reading it resolves the ambiguity exactly:
+
+          * version exists and its producer map records our id at
+            ``new_offset`` -> our put won before the error (success);
+          * version exists but is someone else's candidate -> ordinary
+            conflict (rebase path);
+          * version absent -> the request never reached the store (also the
+            conflict path: rebase finds nothing new and the next attempt
+            simply retries the same version).
+
+        Even if this probe itself keeps failing, correctness holds: we report
+        a conflict, and ``_dedup_pending`` after a later ``refresh`` drops
+        any TGBs that did land — exactly-once never depends on this answer
+        being right, only commit-attempt accounting does.
+        """
+        def probe() -> bool:
+            try:
+                doc = self.manifests.read_doc(version)
+            except (KeyError,):  # NoSuchKey: the put never landed
+                return False
+            row = doc.get("producers", {}).get(self.producer_id)
+            if row is None:
+                return False
+            st = ProducerState.unpack(row)
+            return (st.committed_offset == new_offset
+                    and st.epoch == self.epoch
+                    and st.last_commit_version == version)
+
+        try:
+            return bool(self._retrying(probe))
+        except TransientStoreError:
+            return False
 
     # ------------------------------------------------------------------
     def recover_offset(self) -> int:

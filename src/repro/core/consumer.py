@@ -24,12 +24,13 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.errors import BatchTimeout
+from repro.core.errors import (BatchTimeout, TransientStoreError,
+                               retry_transient)
 from repro.core.manifest import DatasetView, ManifestStore
 from repro.core.objectstore import IOPool, Namespace, NoSuchKey
 from repro.core.stats import LatencyWindow
 from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TAIL_BYTES, TGBFooter,
-                            TGBReader)
+                            TGBFormatError, TGBReader)
 
 
 @dataclass
@@ -39,6 +40,7 @@ class ConsumerStats:
     bytes_fetched: int = 0      # payload + footer/header overhead fetched
     footer_reads: int = 0
     manifest_polls: int = 0
+    read_retries: int = 0       # transient-fault retries on the data path
     # bounded: fixed-size tail for percentiles + exact running count/sum
     read_latencies: LatencyWindow = field(default_factory=LatencyWindow)
     prefetch_hits: int = 0
@@ -117,7 +119,8 @@ class Consumer:
                  parallel_prefetch: bool = True,
                  coalesce_reads: bool = True,
                  speculative_tail: int = SPECULATIVE_TAIL_BYTES,
-                 min_poll_interval_s: float = 0.02):
+                 min_poll_interval_s: float = 0.02,
+                 read_retries: int = 3):
         self.ns = ns
         self.store = ns.store
         self.clock = self.store.clock
@@ -138,6 +141,9 @@ class Consumer:
         # over-read negligible even for small TGBs
         self._window_hint: Optional[int] = None
         self.min_poll_interval_s = min_poll_interval_s
+        # transient-fault tolerance: extra attempts per slice fetch before a
+        # TransientStoreError / short read / CRC failure propagates
+        self.read_retries = read_retries
         self._io_pool = io_pool
         self.stats = ConsumerStats()
         self._stats_lock = threading.Lock()
@@ -177,12 +183,19 @@ class Consumer:
 
     # -- manifest polling -------------------------------------------------------
     def poll(self) -> bool:
-        """Probe for newer manifest versions; returns True if view advanced."""
+        """Probe for newer manifest versions; returns True if view advanced.
+        A transient store failure during the probe reads as "no progress yet"
+        — the next poll retries, which is all a prober needs."""
         self.stats.manifest_polls += 1
-        latest = self.manifests.latest_version(hint=self.view.version)
-        if latest > self.view.version:
-            self.view = self.manifests.load_view(latest, base=self.view)
-            return True
+        try:
+            latest = self.manifests.latest_version(hint=self.view.version)
+            if latest > self.view.version:
+                self.view = self.manifests.load_view(latest, base=self.view)
+                return True
+        except (TransientStoreError, NoSuchKey):
+            # NoSuchKey here means a stale-read window hid a manifest the
+            # probe just saw; the next poll re-reads it
+            pass
         return False
 
     def _wait_for_step(self, step: int, timeout_s: Optional[float]) -> None:
@@ -309,7 +322,25 @@ class Consumer:
 
     def _fetch_and_concat(self, tgb_step: int, d: int, c: int) -> bytes:
         """Fetch slice (d, c); if CP shrank, fetch this rank's span of chunks
-        (one coalesced vectored GET unless coalescing is disabled)."""
+        (one coalesced vectored GET unless coalescing is disabled).
+
+        The fetch is retried up to ``read_retries`` extra times on transient
+        store failures, short reads, and CRC mismatches (all of which a flaky
+        store manufactures): TGBs are immutable, so a clean re-read either
+        succeeds or proves the object is really gone/corrupt. NoSuchKey is
+        retryable too — a stale-read window can hide a just-committed TGB; a
+        really-deleted one still fails after the bounded retries."""
+        def count_retry(_attempt: int) -> None:
+            with self._stats_lock:
+                self.stats.read_retries += 1
+
+        return retry_transient(
+            lambda: self._fetch_once(tgb_step, d, c), self.clock,
+            attempts=self.read_retries + 1, base_delay_s=0.005,
+            retry_on=(TransientStoreError, TGBFormatError, NoSuchKey),
+            on_retry=count_retry)
+
+    def _fetch_once(self, tgb_step: int, d: int, c: int) -> bytes:
         tgb_cp = self._tgb_cp()
         span = max(1, tgb_cp // self.pos.cp_size) if tgb_cp > self.pos.cp_size else 1
         if span == 1:
@@ -378,8 +409,8 @@ class Consumer:
         data = None
         try:
             data = self._fetch_and_concat(tgb_step, d, c)
-        except (KeyError, NoSuchKey):
-            pass
+        except (KeyError, NoSuchKey, TransientStoreError, TGBFormatError):
+            pass  # not fatal: next_batch will fetch the step directly
         finally:
             with self._prefetch_lock:
                 self._inflight.pop(key3, None)
@@ -421,7 +452,8 @@ class Consumer:
             else:
                 try:
                     data = self._fetch_and_concat(tgb_step, d, c)
-                except (KeyError, NoSuchKey):
+                except (KeyError, NoSuchKey, TransientStoreError,
+                        TGBFormatError):
                     break
                 with self._prefetch_lock:
                     self._prefetched[key3] = data

@@ -12,3 +12,39 @@ from __future__ import annotations
 
 class BatchTimeout(TimeoutError):
     """The next batch was not available within the caller's deadline."""
+
+
+class TransientStoreError(IOError):
+    """A retryable object-store failure (5xx, timeout, dropped connection).
+
+    Raised by fault-injecting stores (``repro.core.faults``) and expected from
+    real backends. Clients treat it as *ambiguous*: the request may or may not
+    have been applied server-side. Idempotent operations (immutable PUT of the
+    same payload, ranged GET) are simply retried; the conditional manifest put
+    is resolved by re-reading the version it targeted (see
+    ``CommitProtocol._resolve_ambiguous_put``).
+    """
+
+
+def retry_transient(fn, clock, attempts: int = 4, base_delay_s: float = 0.01,
+                    retry_on=(TransientStoreError,), on_retry=None):
+    """Run an idempotent storage closure with bounded linear-backoff retries.
+
+    The single retry policy for every client that rides out transient store
+    faults (commit-protocol reads, producer TGB uploads, consumer slice
+    fetches). ``retry_on`` widens the retryable set per call site (e.g.
+    stale-read ``NoSuchKey``, CRC/short-read format errors); ``on_retry``
+    is invoked with the attempt number before each re-attempt (retry
+    accounting). The final failure re-raises the last exception unchanged.
+    """
+    last = None
+    for attempt in range(attempts):
+        if attempt:
+            if on_retry is not None:
+                on_retry(attempt)
+            clock.sleep(base_delay_s * attempt)
+        try:
+            return fn()
+        except retry_on as e:
+            last = e
+    raise last

@@ -44,6 +44,19 @@ def write_watermark(ns: Namespace, rank: int, wm: Watermark) -> None:
     ns.store.put(ns.watermark_key(rank), wm.pack())
 
 
+def read_trim_marker(ns: Namespace) -> Optional[Tuple[int, int]]:
+    """Decode the trim marker: ``(safe_step, safe_version)``, or ``None`` if
+    the run was never trimmed. The one place the marker's wire format is
+    parsed — the reclaimer, the producer's ``max_lag`` throttle, and the ops
+    fsck all read through here."""
+    try:
+        raw = ns.store.get(ns.trim_key())
+    except (KeyError, NoSuchKey):
+        return None
+    d = msgpack.unpackb(raw, raw=False)
+    return d["safe_step"], d.get("safe_version", -1)
+
+
 def read_watermarks(ns: Namespace) -> Dict[int, Watermark]:
     out: Dict[int, Watermark] = {}
     for key in ns.store.list(ns.key("watermarks")):
@@ -99,12 +112,8 @@ class Reclaimer:
     # -- trim marker ------------------------------------------------------------
     def read_trim(self) -> Tuple[int, int]:
         """Returns (safe_step, safe_version); (0, -1) if never trimmed."""
-        try:
-            raw = self.store.get(self.ns.trim_key())
-        except (KeyError, NoSuchKey):
-            return 0, -1
-        d = msgpack.unpackb(raw, raw=False)
-        return d["safe_step"], d.get("safe_version", -1)
+        t = read_trim_marker(self.ns)
+        return t if t is not None else (0, -1)
 
     def _write_trim(self, safe_step: int, safe_version: int) -> None:
         self.store.put(self.ns.trim_key(), msgpack.packb(

@@ -22,6 +22,8 @@ from typing import Callable, List, Optional
 
 from repro.core.commit import CommitProtocol
 from repro.core.dac import CommitPolicy, DACPolicy
+from repro.core.errors import TransientStoreError, retry_transient
+from repro.core.lifecycle import read_trim_marker
 from repro.core.manifest import ManifestStore
 from repro.core.objectstore import IOPool, Namespace
 from repro.core.tgb import TGBBuilder, TGBDescriptor, build_uniform_tgb
@@ -121,7 +123,10 @@ class Producer:
                                      offset, uniform_slice_bytes or 1024,
                                      num_samples=num_samples,
                                      token_count=token_count)
-        self.store.put(key, blob)
+        # TGB objects are immutable and keyed by (producer, offset, token), so
+        # retrying the same PUT after a transient 5xx is idempotent — "lost"
+        # writes are simply written again.
+        retry_transient(lambda: self.store.put(key, blob), self.clock)
         desc = TGBDescriptor(
             tgb_id=tgb_id, object_key=key, size_bytes=len(blob),
             dp=self.dp, cp=self.cp, num_samples=num_samples,
@@ -215,11 +220,10 @@ class Producer:
             return False
         view = self.protocol.view
         try:
-            raw = self.store.get(self.ns.trim_key())
-            import msgpack
-            safe_step = msgpack.unpackb(raw, raw=False)["safe_step"]
-        except KeyError:
-            safe_step = 0
+            trim = read_trim_marker(self.ns)
+            safe_step = trim[0] if trim is not None else 0
+        except TransientStoreError:
+            safe_step = 0  # throttling probe only; flaky reads as 0
         ahead = (view.total_steps + len(self.pending)) - safe_step
         return ahead >= self.max_lag
 

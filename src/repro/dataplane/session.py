@@ -42,6 +42,30 @@ def open_dataplane(target, topology: Topology, backend: str = "tgb", *,
 
     Returns a session vending ``writer()`` / ``reader()`` handles that conform
     to the shared ``BatchWriter`` / ``BatchReader`` protocols.
+
+    Raises:
+      TypeError: ``topology`` is not a ``Topology`` (or ``target`` does not
+        match the backend's substrate type).
+      ValueError: ``resume`` token was captured on a different backend
+        (cursors are not portable across transports) or is malformed, or
+        ``backend`` is not a registered backend name.
+      UnsupportedOperation: ``streams`` given with a non-tgb backend.
+
+    Example::
+
+        from repro.core import MemoryObjectStore
+        from repro.dataplane import Topology, open_dataplane
+
+        store = MemoryObjectStore()
+        topo = Topology(dp=2, cp=1, global_batch=4, seq_len=16)
+        session = open_dataplane(store, topo, namespace="runs/job")
+        with session.writer("w0") as w:       # recover() on enter
+            w.write(uniform_slice_bytes=256)  # -> stream offset 0
+        batch = session.reader(dp_rank=0).next_batch(timeout_s=5)
+        token = session.reader(dp_rank=1).checkpoint().encode()
+        # later / elsewhere: resume every reader from the saved cursor
+        session2 = open_dataplane(store, topo, namespace="runs/job",
+                                  resume=token)
     """
     if not isinstance(topology, Topology):
         raise TypeError(f"topology must be a dataplane Topology, got "

@@ -41,6 +41,19 @@ class Topology:
     coordinates). When ``global_batch`` and ``seq_len`` are given, readers
     decode token-slice payloads into ``(global_batch/dp, seq_len/cp)`` int32
     arrays; otherwise batches carry raw bytes only.
+
+    Attributes:
+      dp: data-parallel degree (number of batch slices per global batch).
+      cp: context-parallel degree (token-chunk slices per DP replica).
+      global_batch: optional samples per global batch; must divide by ``dp``.
+      seq_len: optional tokens per sample; must divide by ``cp``.
+
+    Example::
+
+        topo = Topology(dp=4, cp=2, global_batch=64, seq_len=4096)
+        topo.world              # 8 (d, c) mesh positions
+        topo.samples_per_slice  # 16 samples per DP slice
+        topo.seq_per_rank       # 2048 tokens per CP chunk
     """
 
     dp: int = 1
@@ -144,6 +157,17 @@ class Checkpoint:
     ``(weights, seed)``, never stored) and ``streams`` carries every stream's
     ``<V, S>`` cursor as ``(name, version, step)`` triples sorted by name.
     Single-stream tokens have ``streams=None`` and decode unchanged.
+
+    Example — the save/restore round trip::
+
+        token = reader.checkpoint().encode()       # str, store it anywhere
+        ...                                        # crash, restart, rollback
+        ckpt = Checkpoint.decode(token)            # or pass the str directly
+        reader.restore(ckpt)                       # resumes exactly-once
+
+    ``Checkpoint.coerce`` accepts a ``Checkpoint``, an encoded token string,
+    or ``None`` — every facade entry point that takes a cursor uses it, so
+    callers never need to decode by hand.
     """
 
     backend: str
@@ -203,7 +227,14 @@ class Checkpoint:
 
 @runtime_checkable
 class BatchReader(Protocol):
-    """One (dp_rank, cp_rank) position's view of the batch stream."""
+    """One (dp_rank, cp_rank) position's view of the batch stream.
+
+    Structural protocol: every backend reader (``TGBBatchReader``,
+    ``MQBatchReader``, ``ColocatedBatchReader``, ``MixedReader``) satisfies
+    it, so training loops are written once against these four methods. A
+    reader is single-threaded by contract — one reader per rank, ranks never
+    coordinate (the manifest is the only shared state).
+    """
 
     def next_batch(self, timeout_s: Optional[float] = None) -> Batch:
         """Blocking read of the next global batch's shard for this rank.
@@ -226,7 +257,15 @@ class BatchReader(Protocol):
 class BatchWriter(Protocol):
     """One producer's write handle. Context-manager lifecycle: ``__enter__``
     recovers the durable stream offset (exactly-once restart), ``__exit__``
-    finalizes (drains uncommitted batches) on clean exit."""
+    finalizes (drains uncommitted batches) on clean exit.
+
+    The restart contract: re-create the writer with the **same** writer id
+    after a crash and re-enter the context — offsets the dead incarnation
+    already committed are deduplicated by the manifest's producer state map,
+    so replaying the input stream from the recovered offset is exactly-once
+    by construction (rehearsed by ``repro.chaos``; see
+    ``docs/OPERATIONS.md``).
+    """
 
     def write(self, slices: Optional[Mapping[Tuple[int, int], bytes]] = None,
               *, uniform_slice_bytes: Optional[int] = None,

@@ -1,0 +1,24 @@
+"""``repro.ops`` — the ``batchweave`` operator toolkit.
+
+Programmatic API::
+
+    from repro.core import Namespace
+    from repro.ops import fsck, inspect_run
+
+    report = fsck(Namespace(store, "runs/myjob"), repair=False)
+    assert report.clean, report.summary()
+
+CLI (filesystem-backed stores)::
+
+    python -m repro.ops --root /data/bw --namespace runs/myjob inspect
+    python -m repro.ops --root /data/bw -n runs/myjob fsck --repair
+    python -m repro.ops --root /data/bw -n runs/myjob trim --ranks 4
+
+See ``docs/OPERATIONS.md`` for the full runbook.
+"""
+from repro.ops.cli import build_parser, main
+from repro.ops.fsck import FsckIssue, FsckReport, fsck, list_streams
+from repro.ops.inspect import inspect_run
+
+__all__ = ["FsckIssue", "FsckReport", "build_parser", "fsck", "inspect_run",
+           "list_streams", "main"]

@@ -1,0 +1,7 @@
+"""``python -m repro.ops`` — the ``batchweave`` ops CLI."""
+import sys
+
+from repro.ops.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,298 @@
+"""Storage-native integrity checking (the ``batchweave fsck`` engine).
+
+Everything here operates purely through the ``ObjectStore`` interface — no
+side channel, no producer/consumer state — per the paper's storage-native
+recovery design: the object store *is* the system of record, so any operator
+tool (or replacement process) can audit a run from the namespace alone.
+
+Checks performed per namespace (and recursively per stream):
+
+  * **manifest chain** — retained versions must be contiguous (the reclaimer
+    deletes only a prefix); every doc must decode; a delta chain must resolve
+    parent-by-parent back to a snapshot or genesis. Violations are "torn
+    chain" errors.
+  * **torn commits** — every TGB the latest view references must exist with
+    exactly the byte size the manifest recorded.
+  * **orphans** — objects under ``tgb/`` that no retained manifest reaches.
+    Offsets at or below the producer's committed offset are superseded
+    duplicates from crashed incarnations (or trim leftovers): safe to delete,
+    and ``repair`` does. Offsets above it may belong to a *live* producer's
+    uncommitted pending set, so they are reported but never touched.
+  * **trim-vs-checkpoint skew** — the trim marker must never pass the lowest
+    checkpoint watermark (else a restoring rank could find its steps
+    reclaimed), the latest view's ``base_step`` must not exceed it either,
+    and every watermark's manifest version must still be retained.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import msgpack
+
+from repro.core.lifecycle import read_trim_marker, read_watermarks
+from repro.core.manifest import (MANIFEST_FORMAT_FLAT, DatasetView,
+                                 ManifestStore)
+from repro.core.objectstore import Namespace, NoSuchKey
+
+__all__ = ["FsckIssue", "FsckReport", "fsck", "list_streams"]
+
+
+@dataclass(frozen=True)
+class FsckIssue:
+    severity: str  # "error" | "warn"
+    kind: str      # e.g. "torn-manifest-chain", "missing-tgb", "orphan-tgb"
+    key: str       # object key (or logical subject) the issue is about
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.severity}] {self.kind}: {self.key} — {self.detail}"
+
+
+@dataclass
+class FsckReport:
+    namespace: str
+    issues: List[FsckIssue] = field(default_factory=list)
+    checked_manifests: int = 0
+    checked_tgbs: int = 0
+    orphans: List[str] = field(default_factory=list)   # safe-to-delete keys
+    pending: List[str] = field(default_factory=list)   # possibly-live keys
+    repaired: List[str] = field(default_factory=list)  # deleted by repair
+    streams: Dict[str, "FsckReport"] = field(default_factory=dict)
+
+    @property
+    def clean(self) -> bool:
+        """No errors and no reclaimable orphans, here or in any stream."""
+        if any(i.severity == "error" for i in self.issues) or self.orphans:
+            return False
+        return all(r.clean for r in self.streams.values())
+
+    def all_issues(self) -> List[FsckIssue]:
+        out = list(self.issues)
+        for r in self.streams.values():
+            out.extend(r.all_issues())
+        return out
+
+    def summary(self) -> str:
+        n_err = sum(1 for i in self.all_issues() if i.severity == "error")
+        n_warn = sum(1 for i in self.all_issues() if i.severity == "warn")
+        orphans = len(self.orphans) + sum(len(r.orphans)
+                                          for r in self.streams.values())
+        state = "clean" if self.clean else "NOT CLEAN"
+        return (f"fsck {self.namespace}: {state} "
+                f"({self.checked_manifests} manifests, "
+                f"{self.checked_tgbs} tgbs, {n_err} errors, {n_warn} warnings, "
+                f"{orphans} orphans, {len(self.repaired)} repaired)")
+
+
+def list_streams(ns: Namespace) -> List[str]:
+    """Names of child streams under ``<prefix>/streams/`` (storage-derived)."""
+    prefix = ns.key("streams") + "/"
+    names = set()
+    for key in ns.store.list(prefix):
+        rest = key[len(prefix):]
+        if "/" in rest:
+            names.add(rest.split("/", 1)[0])
+    return sorted(names)
+
+
+def _manifest_versions(ns: Namespace) -> List[int]:
+    out = []
+    for key in ns.store.list(ns.key("manifest")):
+        try:
+            out.append(int(key.rsplit("/", 1)[-1].split(".")[0]))
+        except ValueError:
+            pass
+    return sorted(out)
+
+
+def _parse_tgb_key(ns: Namespace, key: str) -> Optional[Tuple[str, int]]:
+    """``<prefix>/tgb/<producer_id>/<offset>-<token>.tgb`` -> (pid, offset)."""
+    prefix = ns.key("tgb") + "/"
+    if not key.startswith(prefix):
+        return None
+    rest = key[len(prefix):]
+    try:
+        pid, fname = rest.rsplit("/", 1)
+        offset = int(fname.split("-", 1)[0])
+    except ValueError:
+        return None
+    return pid, offset
+
+
+def _check_chain(ns: Namespace, versions: List[int],
+                 report: FsckReport) -> Optional[DatasetView]:
+    """Validate the manifest chain; return the latest view if loadable."""
+    store = ns.store
+    for prev, cur in zip(versions, versions[1:]):
+        if cur != prev + 1:
+            report.issues.append(FsckIssue(
+                "error", "torn-manifest-chain", ns.manifest_key(prev + 1),
+                f"retained versions jump {prev} -> {cur}: intermediate "
+                f"manifests are missing"))
+    docs = {}
+    for v in versions:
+        try:
+            docs[v] = msgpack.unpackb(store.get(ns.manifest_key(v)), raw=False,
+                                      strict_map_key=False)
+            report.checked_manifests += 1
+        except (KeyError, NoSuchKey):
+            report.issues.append(FsckIssue(
+                "error", "unreadable-manifest", ns.manifest_key(v),
+                "listed but not readable"))
+        except Exception as e:  # undecodable payload = torn commit
+            report.issues.append(FsckIssue(
+                "error", "corrupt-manifest", ns.manifest_key(v),
+                f"cannot decode: {type(e).__name__}: {e}"))
+    if not versions or versions[-1] not in docs:
+        return None
+    # delta chains must resolve back to a snapshot / genesis / retained parent
+    head = docs[versions[-1]]
+    seen = set()
+    while head.get("format", MANIFEST_FORMAT_FLAT) != MANIFEST_FORMAT_FLAT \
+            and "snapshot_tgbs" not in head:
+        parent = head.get("parent_version", -1)
+        if parent < 0:
+            break
+        if parent in seen:
+            report.issues.append(FsckIssue(
+                "error", "torn-manifest-chain", ns.manifest_key(parent),
+                "delta parent cycle"))
+            return None
+        seen.add(parent)
+        if parent not in docs:
+            report.issues.append(FsckIssue(
+                "error", "torn-manifest-chain", ns.manifest_key(parent),
+                f"delta manifest v{head.get('version')} needs parent "
+                f"v{parent}, which is missing"))
+            return None
+        head = docs[parent]
+    try:
+        return ManifestStore(ns).load_view(versions[-1])
+    except Exception as e:
+        report.issues.append(FsckIssue(
+            "error", "torn-manifest-chain", ns.manifest_key(versions[-1]),
+            f"latest view does not reconstruct: {type(e).__name__}: {e}"))
+        return None
+
+
+def _check_tgbs(ns: Namespace, view: Optional[DatasetView],
+                report: FsckReport) -> None:
+    store = ns.store
+    trim = read_trim_marker(ns)
+    safe_step = trim[0] if trim is not None else 0
+    referenced = set()
+    if view is not None:
+        for i, t in enumerate(view.tgbs):
+            referenced.add(t.object_key)
+            report.checked_tgbs += 1
+            step = view.base_step + i
+            try:
+                size = store.head(t.object_key)
+            except (KeyError, NoSuchKey):
+                if step < safe_step:
+                    # legitimately reclaimed: physically deleted below the
+                    # trim marker, still listed until producers' next
+                    # logical trim advances base_step
+                    continue
+                report.issues.append(FsckIssue(
+                    "error", "missing-tgb", t.object_key,
+                    f"step {step} referenced by manifest v{view.version} "
+                    f"(tgb_id={t.tgb_id}) but absent from the store"))
+                continue
+            if size != t.size_bytes:
+                report.issues.append(FsckIssue(
+                    "error", "tgb-size-mismatch", t.object_key,
+                    f"manifest records {t.size_bytes} B, object is {size} B "
+                    f"(torn commit)"))
+    for key in store.list(ns.key("tgb")):
+        if key in referenced:
+            continue
+        parsed = _parse_tgb_key(ns, key)
+        if parsed is None:
+            report.orphans.append(key)
+            report.issues.append(FsckIssue(
+                "warn", "orphan-tgb", key, "unparseable key, unreferenced"))
+            continue
+        pid, offset = parsed
+        committed = view.producer_offset(pid) if view is not None else -1
+        if offset <= committed:
+            report.orphans.append(key)
+            report.issues.append(FsckIssue(
+                "warn", "orphan-tgb", key,
+                f"producer {pid!r} committed through offset {committed} via "
+                f"other objects; this one is superseded (safe to delete)"))
+        else:
+            report.pending.append(key)
+            report.issues.append(FsckIssue(
+                "warn", "pending-tgb", key,
+                f"offset {offset} > committed {committed}: uncommitted — "
+                f"either a live producer's pending TGB or a crashed "
+                f"incarnation's leftover (not touched)"))
+
+
+def _check_trim_skew(ns: Namespace, view: Optional[DatasetView],
+                     versions: List[int], report: FsckReport) -> None:
+    wms = read_watermarks(ns)
+    trim = read_trim_marker(ns)
+    if wms:
+        min_step = min(w.step for w in wms.values())
+        min_version = min(w.version for w in wms.values())
+        if trim is not None:
+            safe_step, safe_version = trim
+            if safe_step > min_step:
+                report.issues.append(FsckIssue(
+                    "error", "trim-skew", ns.trim_key(),
+                    f"trim marker safe_step={safe_step} passed the lowest "
+                    f"checkpoint watermark step {min_step}: a restoring rank "
+                    f"would find its batches reclaimed"))
+            if safe_version > min_version:
+                report.issues.append(FsckIssue(
+                    "error", "trim-skew", ns.trim_key(),
+                    f"trim marker safe_version={safe_version} passed the "
+                    f"lowest watermark version {min_version}"))
+        if view is not None and view.base_step > min_step:
+            report.issues.append(FsckIssue(
+                "error", "trim-skew", ns.manifest_key(view.version),
+                f"latest manifest base_step={view.base_step} passed the "
+                f"lowest watermark step {min_step}"))
+        if versions:
+            lowest_retained = versions[0]
+            for rank, wm in sorted(wms.items()):
+                if wm.version >= 0 and wm.version < lowest_retained:
+                    report.issues.append(FsckIssue(
+                        "error", "watermark-unreadable",
+                        ns.watermark_key(rank),
+                        f"rank {rank} checkpointed at manifest v{wm.version} "
+                        f"but the oldest retained version is "
+                        f"v{lowest_retained}: that checkpoint cannot "
+                        f"restore"))
+    elif trim is not None and trim[0] > 0:
+        report.issues.append(FsckIssue(
+            "warn", "trim-without-watermarks", ns.trim_key(),
+            f"trim marker at safe_step={trim[0]} but no watermarks exist"))
+
+
+def fsck(ns: Namespace, repair: bool = False,
+         recurse_streams: bool = True) -> FsckReport:
+    """Audit one run namespace through the storage layer alone.
+
+    ``repair=True`` deletes the *safely* orphaned TGB objects (superseded
+    duplicates below their producer's committed offset) — never pending ones,
+    never manifests. Returns the full :class:`FsckReport`.
+    """
+    report = FsckReport(namespace=ns.prefix)
+    versions = _manifest_versions(ns)
+    view = _check_chain(ns, versions, report)
+    _check_tgbs(ns, view, report)
+    _check_trim_skew(ns, view, versions, report)
+    if repair and report.orphans:
+        for key in list(report.orphans):
+            ns.store.delete(key)
+            report.repaired.append(key)
+        report.orphans.clear()
+    if recurse_streams:
+        for name in list_streams(ns):
+            report.streams[name] = fsck(ns.stream(name), repair=repair,
+                                        recurse_streams=False)
+    return report

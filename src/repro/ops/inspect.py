@@ -1,0 +1,69 @@
+"""Read-only run introspection (the ``batchweave inspect`` engine).
+
+Builds a plain-dict summary of a run namespace straight from storage:
+manifest chain shape, per-producer durable state, watermarks, the trim
+marker, and (recursively) every stream of a multi-stream run. The dict is
+stable and JSON-serializable so scripts can consume ``--json`` output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.lifecycle import read_trim_marker, read_watermarks
+from repro.core.manifest import MANIFEST_FORMAT_FLAT, ManifestStore
+from repro.core.objectstore import Namespace, NoSuchKey
+from repro.ops.fsck import _manifest_versions, list_streams
+
+__all__ = ["inspect_run"]
+
+
+def inspect_run(ns: Namespace, recurse_streams: bool = True) -> Dict:
+    """Summarize one run namespace from storage alone (no client state)."""
+    store = ns.store
+    versions = _manifest_versions(ns)
+    out: Dict = {
+        "namespace": ns.prefix,
+        "manifests": {
+            "retained": len(versions),
+            "oldest": versions[0] if versions else None,
+            "latest": versions[-1] if versions else None,
+        },
+        "producers": {},
+        "watermarks": {},
+        "trim": None,
+        "tgb_objects": len(store.list(ns.key("tgb"))),
+    }
+    if versions:
+        manifests = ManifestStore(ns)
+        doc = manifests.read_doc(versions[-1])
+        out["manifests"]["format"] = doc.get("format", MANIFEST_FORMAT_FLAT)
+        try:
+            out["manifests"]["bytes"] = store.head(
+                ns.manifest_key(versions[-1]))
+        except (KeyError, NoSuchKey):
+            out["manifests"]["bytes"] = None
+        view = manifests.load_view(versions[-1])
+        out["view"] = {
+            "version": view.version,
+            "base_step": view.base_step,
+            "total_steps": view.total_steps,
+            "live_tgbs": len(view.tgbs),
+            "live_bytes": sum(t.size_bytes for t in view.tgbs),
+        }
+        out["producers"] = {
+            pid: {"committed_offset": st.committed_offset,
+                  "last_commit_version": st.last_commit_version,
+                  "epoch": st.epoch}
+            for pid, st in sorted(view.producers.items())
+        }
+    for rank, wm in sorted(read_watermarks(ns).items()):
+        out["watermarks"][str(rank)] = {"version": wm.version, "step": wm.step}
+    trim = read_trim_marker(ns)
+    if trim is not None:
+        out["trim"] = {"safe_step": trim[0], "safe_version": trim[1]}
+    if recurse_streams:
+        streams = {name: inspect_run(ns.stream(name), recurse_streams=False)
+                   for name in list_streams(ns)}
+        if streams:
+            out["streams"] = streams
+    return out

@@ -1,0 +1,39 @@
+"""The chaos harness IS a test suite; this runs every registered scenario
+under pytest (two seeds) so CI cannot ship a scenario that regressed."""
+import pytest
+
+from repro.chaos import SCENARIOS, run_scenario
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_scenario(name, seed):
+    r = run_scenario(name, seed=seed)
+    assert r.passed, f"{name} (seed={seed}): {r.detail}"
+    assert r.fsck_clean_after, f"{name} left the namespace dirty"
+    assert r.steps_delivered > 0
+
+
+def test_registry_covers_required_protocol_points():
+    required = {
+        "producer_precommit_kill", "producer_post_upload_kill",
+        "consumer_midstep_kill", "mixed_reader_midstep_kill",
+        "reclaimer_midtrim_kill", "cput_conflict_storm",
+    }
+    assert required <= set(SCENARIOS), \
+        f"missing scenarios: {required - set(SCENARIOS)}"
+
+
+def test_failed_assertion_becomes_failed_result():
+    from repro.chaos import scenario
+
+    @scenario("_always_fails")
+    def _always_fails(seed=0):
+        raise AssertionError("intentional")
+
+    try:
+        r = run_scenario("_always_fails")
+        assert not r.passed
+        assert "intentional" in r.detail
+    finally:
+        del SCENARIOS["_always_fails"]

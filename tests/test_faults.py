@@ -1,0 +1,164 @@
+"""FaultyObjectStore semantics + client resilience to injected faults."""
+import pytest
+
+from repro.core import (Consumer, FaultPolicy, FaultyObjectStore,
+                        ManifestStore, MemoryObjectStore, MeshPosition,
+                        Namespace, NoSuchKey, Producer, TransientStoreError)
+
+
+def faulty(policy, inner=None):
+    inner = inner or MemoryObjectStore()
+    return FaultyObjectStore(inner, policy), inner
+
+
+# ---------------------------------------------------------------------------
+# wrapper semantics
+# ---------------------------------------------------------------------------
+
+def test_same_seed_replays_identical_faults():
+    def run(seed):
+        store, _ = faulty(FaultPolicy(seed=seed, get_error_rate=0.3,
+                                      put_error_rate=0.3))
+        for i in range(40):
+            try:
+                store.put(f"k{i}", b"x" * 8)
+            except TransientStoreError:
+                pass
+            try:
+                store.get(f"k{i}")
+            except (TransientStoreError, KeyError):
+                pass
+        return dict(store.fault_stats.counts)
+
+    assert run(7) == run(7)
+    assert run(7) != run(8)  # astronomically unlikely to collide
+
+
+def test_lost_ack_cput_applies_then_raises():
+    store, inner = faulty(FaultPolicy(cput_error_rate=1.0,
+                                      cput_lost_ack_rate=1.0, max_faults=1))
+    with pytest.raises(TransientStoreError):
+        store.put_if_absent("m/1", b"payload")
+    # the write landed server-side before the "failure"
+    assert inner.get("m/1") == b"payload"
+    # budget exhausted: the retry observes the ordinary conflict
+    assert store.put_if_absent("m/1", b"other") is False
+
+
+def test_timeout_cput_never_applies():
+    store, inner = faulty(FaultPolicy(cput_error_rate=1.0,
+                                      cput_lost_ack_rate=0.0, max_faults=1))
+    with pytest.raises(TransientStoreError):
+        store.put_if_absent("m/1", b"payload")
+    assert not inner.exists("m/1")
+    assert store.put_if_absent("m/1", b"payload") is True
+
+
+def test_short_read_truncates_range_get():
+    store, _ = faulty(FaultPolicy(short_read_rate=1.0, max_faults=1))
+    store.put("k", b"A" * 100)
+    assert len(store.get_range("k", 0, 100)) == 50  # injected
+    assert len(store.get_range("k", 0, 100)) == 100  # budget spent
+
+
+def test_stale_read_window_hides_recent_keys():
+    store, _ = faulty(FaultPolicy(stale_read_rate=1.0, stale_depth=2,
+                                  max_faults=3))
+    store.put("old", b"x")
+    store.put("new1", b"y")
+    store.put("new2", b"z")
+    with pytest.raises(NoSuchKey):
+        store.get("new2")                # fault 1
+    listing = store.list("")             # faults 2+3: both recent keys hidden
+    assert "old" in listing
+    assert "new1" not in listing and "new2" not in listing
+    assert store.get("new2") == b"z"     # budget exhausted: visible again
+
+
+def test_key_filter_limits_blast_radius():
+    store, _ = faulty(FaultPolicy(get_error_rate=1.0, key_filter="/manifest/"))
+    store.put("runs/x/tgb/a", b"1")
+    store.put("runs/x/manifest/00000001.manifest", b"2")
+    assert store.get("runs/x/tgb/a") == b"1"  # not eligible
+    with pytest.raises(TransientStoreError):
+        store.get("runs/x/manifest/00000001.manifest")
+
+
+def test_max_faults_budget_is_global():
+    store, _ = faulty(FaultPolicy(get_error_rate=1.0, max_faults=3))
+    store.put("k", b"x")
+    fired = 0
+    for _ in range(10):
+        try:
+            store.get("k")
+        except TransientStoreError:
+            fired += 1
+    assert fired == 3
+
+
+# ---------------------------------------------------------------------------
+# client resilience
+# ---------------------------------------------------------------------------
+
+def test_commit_protocol_resolves_lost_ack_as_win():
+    store, _ = faulty(FaultPolicy(cput_error_rate=1.0, cput_lost_ack_rate=1.0,
+                                  key_filter=".manifest", max_faults=1))
+    ns = Namespace(store, "runs/t")
+    p = Producer(ns, "P", dp=1, cp=1, manifests=ManifestStore(ns))
+    p.write_tgb(uniform_slice_bytes=32)
+    assert p.maybe_commit(force=True) is True  # ambiguity resolved by re-read
+    assert p.stats.commit_successes == 1
+    assert p.stats.commit_conflicts == 0
+    view = ManifestStore(ns).load_view(ManifestStore(ns).latest_version())
+    assert [t.producer_seq for t in view.tgbs] == [0]
+
+
+def test_commit_protocol_treats_unapplied_timeout_as_conflict():
+    store, _ = faulty(FaultPolicy(cput_error_rate=1.0, cput_lost_ack_rate=0.0,
+                                  key_filter=".manifest", max_faults=1))
+    ns = Namespace(store, "runs/t")
+    p = Producer(ns, "P", dp=1, cp=1, manifests=ManifestStore(ns))
+    p.write_tgb(uniform_slice_bytes=32)
+    assert p.maybe_commit(force=True) is False  # nothing landed
+    assert len(p.pending) == 1                  # TGB still queued
+    assert p.maybe_commit(force=True) is True   # clean retry commits it
+    view = ManifestStore(ns).load_view(ManifestStore(ns).latest_version())
+    assert [t.producer_seq for t in view.tgbs] == [0]
+
+
+def test_producer_retries_transient_tgb_upload():
+    store, _ = faulty(FaultPolicy(put_error_rate=1.0, key_filter="/tgb/",
+                                  max_faults=2))
+    ns = Namespace(store, "runs/t")
+    p = Producer(ns, "P", dp=1, cp=1, manifests=ManifestStore(ns))
+    desc = p.write_tgb(uniform_slice_bytes=32)  # retried past 2 faults
+    assert store.exists(desc.object_key)
+
+
+def test_consumer_retries_flaky_and_short_reads():
+    inner = MemoryObjectStore()
+    ns_clean = Namespace(inner, "runs/t")
+    p = Producer(ns_clean, "P", dp=1, cp=1, manifests=ManifestStore(ns_clean))
+    for _ in range(4):
+        p.write_tgb(uniform_slice_bytes=128)
+        p.maybe_commit(force=True)
+    p.finalize()
+    store = FaultyObjectStore(inner, FaultPolicy(
+        get_error_rate=0.5, short_read_rate=0.5, key_filter="/tgb/",
+        max_faults=6, seed=1))
+    cons = Consumer(Namespace(store, "runs/t"), MeshPosition(0, 0, 1, 1))
+    batches = [cons.next_batch(timeout_s=5) for _ in range(4)]
+    assert all(len(b) == 128 for b in batches)
+    assert cons.stats.read_retries >= 1
+
+
+def test_consumer_gives_up_after_bounded_retries():
+    store, _ = faulty(FaultPolicy(get_error_rate=1.0, key_filter="/tgb/"))
+    ns = Namespace(store, "runs/t")
+    p = Producer(ns, "P", dp=1, cp=1, manifests=ManifestStore(ns))
+    p.write_tgb(uniform_slice_bytes=32)
+    p.maybe_commit(force=True)
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1), read_retries=2)
+    with pytest.raises(TransientStoreError):
+        cons.next_batch(timeout_s=5)
+    assert cons.stats.read_retries == 2

@@ -1,0 +1,228 @@
+"""`repro.ops` — inspect / fsck / trim, API and CLI."""
+import io
+
+import pytest
+
+from repro.core import (FileObjectStore, ManifestStore, MemoryObjectStore,
+                        Namespace, Producer, Reclaimer, Watermark,
+                        write_watermark)
+from repro.ops import fsck, inspect_run, main
+
+
+def _publish(ns, n=5, pid="P", manifests=None, slice_bytes=64):
+    p = Producer(ns, pid, dp=1, cp=1,
+                 manifests=manifests or ManifestStore(ns))
+    for _ in range(n):
+        p.write_tgb(uniform_slice_bytes=slice_bytes)
+        p.maybe_commit(force=True)
+    p.finalize()
+    return p
+
+
+# ---------------------------------------------------------------------------
+# fsck
+# ---------------------------------------------------------------------------
+
+def test_fsck_clean_on_healthy_run(ns):
+    _publish(ns, 5)
+    report = fsck(ns)
+    assert report.clean, report.summary()
+    assert report.checked_manifests == 5
+    assert report.checked_tgbs == 5
+    assert not report.orphans and not report.pending
+
+
+def test_fsck_detects_deliberate_orphan_and_repairs(ns):
+    _publish(ns, 5)
+    # a crashed incarnation's superseded object: committed offset is 4, so an
+    # unreferenced object at offset 2 is a safe orphan
+    orphan_key = ns.tgb_key("P", 2, "deadbeef")
+    ns.store.put(orphan_key, b"leftover")
+    report = fsck(ns)
+    assert not report.clean
+    assert report.orphans == [orphan_key]
+    assert any(i.kind == "orphan-tgb" for i in report.issues)
+    repaired = fsck(ns, repair=True)
+    assert repaired.repaired == [orphan_key]
+    assert not ns.store.exists(orphan_key)
+    assert fsck(ns).clean
+
+
+def test_fsck_keeps_hands_off_pending_tgbs(ns):
+    _publish(ns, 3)
+    # offset 10 > committed 2: could be a live producer's pending TGB
+    pending_key = ns.tgb_key("P", 10, "cafecafe")
+    ns.store.put(pending_key, b"inflight")
+    report = fsck(ns, repair=True)
+    assert report.pending == [pending_key]
+    assert ns.store.exists(pending_key)  # never repaired
+    assert not report.orphans
+    # pending-only namespaces stay clean: mid-run states are not errors
+    assert report.clean
+
+
+def test_fsck_detects_missing_tgb_as_torn_commit(ns):
+    _publish(ns, 4)
+    view = ManifestStore(ns).load_view(ManifestStore(ns).latest_version())
+    ns.store.delete(view.tgbs[1].object_key)
+    report = fsck(ns)
+    assert not report.clean
+    assert any(i.kind == "missing-tgb" for i in report.issues)
+
+
+def test_fsck_accepts_reclaimed_tgbs_below_trim(ns):
+    _publish(ns, 6)
+    write_watermark(ns, 0, Watermark(version=6, step=4))
+    Reclaimer(ns, expected_ranks=1).run_cycle()
+    # objects below the trim marker are gone but still listed: that is the
+    # legitimate post-reclaim state, not a torn commit
+    report = fsck(ns)
+    assert report.clean, report.summary()
+
+
+def test_fsck_detects_tgb_size_mismatch(ns):
+    _publish(ns, 3)
+    view = ManifestStore(ns).load_view(ManifestStore(ns).latest_version())
+    ns.store.put(view.tgbs[0].object_key, b"short")
+    report = fsck(ns)
+    assert any(i.kind == "tgb-size-mismatch" for i in report.issues)
+    assert not report.clean
+
+
+def test_fsck_detects_torn_flat_chain(ns):
+    _publish(ns, 5)
+    ns.store.delete(ns.manifest_key(3))  # mid-chain gap: never legitimate
+    report = fsck(ns)
+    assert any(i.kind == "torn-manifest-chain" for i in report.issues)
+    assert not report.clean
+
+
+def test_fsck_detects_torn_delta_chain(ns):
+    manifests = ManifestStore(ns, fmt="delta", snapshot_every=100)
+    _publish(ns, 6, manifests=manifests)
+    # delete an intermediate delta: v6 can no longer rebuild through v3
+    ns.store.delete(ns.manifest_key(3))
+    report = fsck(ns)
+    assert any(i.kind == "torn-manifest-chain" for i in report.issues)
+    assert not report.clean
+
+
+def test_fsck_detects_trim_skew(ns):
+    _publish(ns, 6)
+    write_watermark(ns, 0, Watermark(version=6, step=3))
+    # corrupt operation: trim marker advanced past the lowest watermark
+    import msgpack
+    ns.store.put(ns.trim_key(),
+                 msgpack.packb({"safe_step": 5, "safe_version": 2}))
+    report = fsck(ns)
+    assert any(i.kind == "trim-skew" for i in report.issues)
+    assert not report.clean
+
+
+def test_fsck_detects_unrestorable_watermark(ns):
+    _publish(ns, 6)
+    # rank 0 checkpointed at v2, but the retained prefix now starts at v3
+    write_watermark(ns, 0, Watermark(version=2, step=1))
+    for v in (0, 1, 2):
+        ns.store.delete(ns.manifest_key(v))
+    report = fsck(ns)
+    assert any(i.kind == "watermark-unreadable" for i in report.issues)
+
+
+def test_fsck_recurses_streams(store):
+    from repro.dataplane import Topology, open_dataplane
+
+    session = open_dataplane(store, Topology(dp=1, cp=1), backend="tgb",
+                             namespace="runs/mix",
+                             streams={"a": 1.0, "b": 1.0})
+    for name in session.stream_names:
+        with session.writer(f"w{name}", stream=name) as w:
+            for _ in range(3):
+                w.write(uniform_slice_bytes=32)
+    ns = Namespace(store, "runs/mix")
+    report = fsck(ns)
+    assert set(report.streams) == {"a", "b"}
+    assert report.clean
+    # an orphan inside one stream taints the run-level verdict
+    a_ns = ns.stream("a")
+    store.put(a_ns.tgb_key("wa", 0, "feedface"), b"x")
+    report = fsck(ns)
+    assert not report.clean
+    assert report.streams["a"].orphans
+
+
+# ---------------------------------------------------------------------------
+# inspect
+# ---------------------------------------------------------------------------
+
+def test_inspect_reports_run_state(ns):
+    p = _publish(ns, 4)  # 4 commits -> versions 0..3
+    write_watermark(ns, 0, Watermark(version=3, step=2))
+    Reclaimer(ns, expected_ranks=1, physical_delete=False).run_cycle()
+    info = inspect_run(ns)
+    assert info["manifests"]["latest"] == 3
+    assert info["view"]["total_steps"] == 4
+    assert info["producers"]["P"]["committed_offset"] == 3
+    assert info["producers"]["P"]["epoch"] == p.protocol.epoch
+    assert info["watermarks"]["0"] == {"version": 3, "step": 2}
+    assert info["trim"] == {"safe_step": 2, "safe_version": 3}
+    assert info["tgb_objects"] == 4
+
+
+def test_inspect_empty_namespace(ns):
+    info = inspect_run(ns)
+    assert info["manifests"]["latest"] is None
+    assert info["tgb_objects"] == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI (exit codes are the contract scripts rely on)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def file_run(tmp_path):
+    store = FileObjectStore(str(tmp_path / "store"))
+    ns = Namespace(store, "runs/job")
+    _publish(ns, 4)
+    return tmp_path / "store", ns
+
+
+def test_cli_inspect_and_fsck_clean(file_run, capsys):
+    root, _ns = file_run
+    assert main(["--root", str(root), "-n", "runs/job", "inspect"]) == 0
+    assert "total_steps=4" in capsys.readouterr().out
+    assert main(["--root", str(root), "-n", "runs/job", "fsck"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_fsck_finds_and_repairs_orphan(file_run, capsys):
+    root, ns = file_run
+    ns.store.put(ns.tgb_key("P", 1, "deadbeef"), b"junk")
+    assert main(["--root", str(root), "-n", "runs/job", "fsck"]) == 1
+    assert "orphan-tgb" in capsys.readouterr().out
+    assert main(["--root", str(root), "-n", "runs/job", "fsck",
+                 "--repair"]) == 1  # reports the state it found, then fixes
+    capsys.readouterr()
+    assert main(["--root", str(root), "-n", "runs/job", "fsck"]) == 0
+
+
+def test_cli_fsck_json_output(file_run, capsys):
+    import json
+
+    root, _ns = file_run
+    assert main(["--root", str(root), "-n", "runs/job", "--json",
+                 "fsck"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["clean"] is True
+    assert doc["checked_tgbs"] == 4
+
+
+def test_cli_trim(file_run, capsys):
+    root, ns = file_run
+    write_watermark(ns, 0, Watermark(version=3, step=2))
+    out = io.StringIO()
+    assert main(["--root", str(root), "-n", "runs/job", "trim",
+                 "--ranks", "1"], out=out) == 0
+    assert "safe_step=2" in out.getvalue()
+    assert len(ns.store.list(ns.key("tgb"))) == 2  # steps 0,1 reclaimed
+    assert main(["--root", str(root), "-n", "runs/job", "fsck"]) == 0

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Offline link check for the markdown docs tree.
+
+Verifies that every relative link target in the given markdown files exists
+on disk (resolved against the linking file's directory). External links
+(http/https/mailto) and pure in-page anchors are skipped — CI must not
+depend on the network. Also rejects unbalanced ``` fences, which silently
+swallow whole sections (including Mermaid diagrams) when rendered.
+
+Usage: python tools/check_links.py README.md docs/*.md
+Exit code 1 if any target is missing.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    fences = sum(1 for line in text.splitlines()
+                 if line.lstrip().startswith("```"))
+    if fences % 2:
+        errors.append(f"{path}: unbalanced ``` code fences ({fences})")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors = []
+    checked = 0
+    for arg in argv:
+        p = Path(arg)
+        if not p.exists():
+            errors.append(f"{p}: file not found")
+            continue
+        checked += 1
+        errors.extend(check_file(p))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {checked} files checked, {len(errors)} problems")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
