@@ -1,0 +1,168 @@
+"""Fig. 14 — checkpoint-aligned recovery: RunManifest vs naive two-file saves.
+
+Three sub-experiments on the simulated S3-class latency model (model time):
+
+  * ``recover/{aligned,naive}`` — crash-to-first-replayed-batch latency. Both
+    runs crash in the same place: after the step-B model upload, before the
+    second half of the save. The aligned path resumes from the last
+    *committed* RunManifest entry (one LIST + GET, then model + cursor come
+    back together); the naive path lists step dirs, restores the newest model
+    and reads a separately-written cursor file.
+  * ``consistency/{aligned,naive}`` — the duplicated-step count the crash
+    induces. Naive two-file checkpointing leaves model@B paired with
+    cursor@A: the B-A window is trained twice (exactly-once broken). The
+    aligned RunManifest binds model and cursor in one conditional put, so the
+    count is 0 by construction.
+  * ``resize/dp{K}`` — elastic restore cost: time from ``TrainSession.resume``
+    on a factor-resized topology to every new rank's first batch (the remap
+    is metadata-only; no data is rewritten).
+
+``us_per_call`` is model-time latency in µs (consistency rows report the
+duplicated-step count instead).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, bench_clock, bench_store
+from repro.core import Namespace
+from repro.dataplane import Topology
+from repro.run import TrainSession
+from repro.train.checkpoint import (list_checkpoints, load_model_state,
+                                    upload_model_state)
+
+SLICE_BYTES = 64_000
+CKPT_AT = 4          # step of the last durable (aligned/complete) save
+CRASH_AT = 8         # step of the save the crash interrupts
+
+
+def _model_state(step: int):
+    return {"w": np.full(32_768, step, dtype=np.float32)}  # 128 KiB
+
+
+def _template():
+    return {"w": np.zeros(32_768, dtype=np.float32)}
+
+
+def _fill(session: TrainSession, n_tgbs: int) -> None:
+    with session.writer("P") as w:
+        for _ in range(n_tgbs):
+            w.write(uniform_slice_bytes=SLICE_BYTES)
+        w.flush()
+
+
+def _aligned_run(clock, n_tgbs: int) -> List[Row]:
+    store = bench_store(clock)
+    topo = Topology(dp=1, cp=1)
+    sess = TrainSession(store, topo, namespace="runs/fig14/aligned")
+    _fill(sess, n_tgbs)
+    r = sess.reader()
+    for _ in range(CKPT_AT):
+        r.next_batch(timeout_s=30)
+    sess.checkpoint(_model_state(CKPT_AT))          # durable aligned save
+    for _ in range(CRASH_AT - CKPT_AT):
+        r.next_batch(timeout_s=30)
+    # crash window: model@CRASH_AT uploads, the RunManifest put never runs
+    upload_model_state(sess.ns, CRASH_AT, _model_state(CRASH_AT))
+
+    t0 = clock.now()
+    resumed = TrainSession.resume(store, "runs/fig14/aligned")
+    state = resumed.restore_model(_template())
+    r2 = resumed.reader()
+    r2.next_batch(timeout_s=30)
+    dt = clock.now() - t0
+    model_step = int(state["w"][0])
+    duplicated = model_step - resumed.resume_step   # 0: model == cursor step
+    return [
+        Row("fig14/recover/aligned", dt * 1e6,
+            f"resume_step={resumed.resume_step}"),
+        Row("fig14/consistency/aligned", float(duplicated),
+            f"model@{model_step} cursor@{resumed.resume_step}"),
+    ]
+
+
+def _naive_run(clock, n_tgbs: int) -> List[Row]:
+    """The pre-RunManifest flow: model dirs + a separate cursor object, with
+    the crash landing between the two writes of the second save."""
+    store = bench_store(clock)
+    topo = Topology(dp=1, cp=1)
+    sess = TrainSession(store, topo, namespace="runs/fig14/naive")
+    ns = Namespace(store, "runs/fig14/naive")
+    cursor_key = ns.key("naive", "CURSOR")
+    _fill(sess, n_tgbs)
+    r = sess.reader()
+    for _ in range(CKPT_AT):
+        r.next_batch(timeout_s=30)
+    upload_model_state(ns, CKPT_AT, _model_state(CKPT_AT))
+    ck = r.checkpoint()
+    store.put(cursor_key, f"{ck.version},{ck.step}".encode())
+    for _ in range(CRASH_AT - CKPT_AT):
+        r.next_batch(timeout_s=30)
+    upload_model_state(ns, CRASH_AT, _model_state(CRASH_AT))
+    # ...crash here: the cursor write for CRASH_AT never happens
+
+    t0 = clock.now()
+    steps = list_checkpoints(ns)
+    state, _doc = load_model_state(
+        ns, ns.checkpoint_key(steps[-1], "MANIFEST.ckpt"), _template())
+    v, s = (int(x) for x in store.get(cursor_key).split(b","))
+    r2 = sess.data.reader()
+    from repro.dataplane.types import Checkpoint
+    r2.restore(Checkpoint("tgb", version=v, step=s))
+    r2.next_batch(timeout_s=30)
+    dt = clock.now() - t0
+    model_step = int(state["w"][0])
+    duplicated = model_step - s      # the window trained twice
+    return [
+        Row("fig14/recover/naive", dt * 1e6, f"resume_step={s}"),
+        Row("fig14/consistency/naive", float(duplicated),
+            f"model@{model_step} cursor@{s} EXACTLY-ONCE-BROKEN"),
+    ]
+
+
+def _resize_run(clock, n_tgbs: int, new_dp: int) -> Row:
+    store = bench_store(clock)
+    topo = Topology(dp=2, cp=1)
+    ns_name = f"runs/fig14/resize{new_dp}"
+    sess = TrainSession(store, topo, namespace=ns_name)
+    _fill(sess, n_tgbs)
+    readers = [sess.reader(dp_rank=d) for d in range(2)]
+    for _ in range(CKPT_AT):
+        for r in readers:
+            r.next_batch(timeout_s=30)
+    sess.checkpoint(_model_state(CKPT_AT))
+
+    t0 = clock.now()
+    resumed = TrainSession.resume(store, ns_name,
+                                  topology=Topology(dp=new_dp, cp=1))
+    resumed.restore_model(_template())
+    new_readers = [resumed.reader(dp_rank=d) for d in range(new_dp)]
+    for r in new_readers:
+        r.next_batch(timeout_s=30)
+    dt = clock.now() - t0
+    return Row(f"fig14/resize/dp{new_dp}", dt * 1e6,
+               f"resume_step={resumed.resume_step} ranks={new_dp}")
+
+
+def _warmup() -> None:
+    """Pay jax's one-time dispatch cost outside the timed windows (both
+    recovery paths share the same array-restore code)."""
+    try:
+        import jax.numpy as jnp
+
+        np.asarray(jnp.asarray(np.zeros(4, dtype=np.float32)))
+    except Exception:
+        pass
+
+
+def run(quick: bool = True) -> List[Row]:
+    _warmup()
+    clock = bench_clock()
+    n_tgbs = 12 if quick else 32
+    rows = _aligned_run(clock, n_tgbs)
+    rows += _naive_run(clock, n_tgbs)
+    rows.append(_resize_run(clock, n_tgbs, new_dp=4))
+    rows.append(_resize_run(clock, n_tgbs, new_dp=1))
+    return rows

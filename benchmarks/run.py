@@ -21,6 +21,7 @@ FIGS = [
     ("fig11", "benchmarks.fig11_multisource"),
     ("fig12", "benchmarks.fig12_io_path"),
     ("fig13", "benchmarks.fig13_failure_isolation"),
+    ("fig14", "benchmarks.fig14_aligned_recovery"),
 ]
 
 

@@ -1,17 +1,20 @@
-"""Fault-tolerance demo through the facade: producer crash + exactly-once
-takeover, consumer rollback via Checkpoint tokens, and checkpoint-aligned
-reclamation — the paper's §5.3 end to end.
+"""Fault-tolerance demo through the checkpoint-aligned run facade: producer
+crash + exactly-once takeover, a trainer killed *between* model upload and
+RunManifest commit (the window that breaks naive two-file checkpointing),
+aligned rollback via TrainSession.resume, and reclamation bounded by the last
+aligned checkpoint — the paper's §5.3 end to end.
 
 Run:  PYTHONPATH=src python examples/failover.py
 """
 import numpy as np
 
 from repro.core import FaultInjector, InjectedCrash, MemoryObjectStore
-from repro.dataplane import Checkpoint, Topology, open_dataplane
+from repro.dataplane import Topology
+from repro.run import TrainSession
 
 store = MemoryObjectStore(faults=FaultInjector())
 topo = Topology(dp=1, cp=1, global_batch=2, seq_len=32)
-session = open_dataplane(store, topo, backend="tgb", namespace="runs/failover")
+session = TrainSession(store, topo, namespace="runs/failover")
 
 
 def token_stream(seed: int, n_batches: int) -> np.ndarray:
@@ -31,7 +34,7 @@ try:
             w.flush()
 except InjectedCrash:
     print(f"producer W crashed mid-commit at stream offset {crashed_at}")
-store.faults = None
+store.faults = FaultInjector()
 
 # -- 2. replacement takes over exactly-once ------------------------------------
 view = session.manifest_view()
@@ -48,19 +51,35 @@ assert seqs == sorted(set(seqs)), "duplicate or reordered offsets!"
 print(f"replacement resumed at offset {resume}; stream is dense: "
       f"{seqs[:4]}...{seqs[-2:]} (no dups, no gaps)")
 
-# -- 3. consumer rollback --------------------------------------------------------
+# -- 3. trainer killed between model upload and RunManifest commit -------------
 reader = session.reader()
-first = [reader.next_batch(timeout_s=5) for _ in range(6)]
-ckpt = Checkpoint("tgb", version=first[3].version, step=4)  # as-of step 4
-more = [reader.next_batch(timeout_s=5) for _ in range(2)]
-replayer = session.reader(resume=ckpt.encode())  # token round-trips as a string
-replay = [replayer.next_batch(timeout_s=5) for _ in range(2)]
-assert [b.payload for b in replay] == [b.payload for b in first[4:6]]
-print("rollback to checkpoint cursor replayed the identical batches")
+first = [reader.next_batch(timeout_s=5) for _ in range(4)]
+model = {"w": np.arange(4, dtype=np.float32)}
+entry = session.checkpoint(model)  # ONE commit binds model + cursor @ step 4
+print(f"aligned checkpoint committed: RunManifest seq {entry.seq} "
+      f"@ step {entry.step}")
+lost = [reader.next_batch(timeout_s=5) for _ in range(2)]   # steps 4, 5
+store.faults.crash_on("cput", key_substr=".rm", nth=1)      # the fatal window
+try:
+    session.checkpoint({"w": model["w"] * -1.0})
+    raise AssertionError("injected crash never fired")
+except InjectedCrash:
+    print("trainer crashed AFTER model upload, BEFORE RunManifest commit")
+store.faults = None
 
-# -- 4. reclamation below W_global ----------------------------------------------
-session.save_watermark(0, ckpt)
-deleted = session.reclaim()
-print(f"reclaimer deleted {deleted} TGBs below W_global; "
+# -- 4. aligned resume: old model + old cursor, together, exactly-once ---------
+resumed = TrainSession.resume(store, "runs/failover")
+state = resumed.restore_model({"w": np.zeros(4, np.float32)})
+assert np.array_equal(np.asarray(state["w"]), model["w"]), \
+    "resume must yield the ALIGNED model, not the half-committed one"
+replayer = resumed.reader()
+replay = [replayer.next_batch(timeout_s=5) for _ in range(2)]
+assert [b.payload for b in replay] == [b.payload for b in lost]
+print(f"resumed at step {resumed.resume_step}: aligned model restored and "
+      f"the lost window replayed byte-identically")
+
+# -- 5. reclamation below the last aligned checkpoint --------------------------
+deleted = resumed.reclaim()
+print(f"reclaimer deleted {deleted} TGBs below the aligned checkpoint; "
       f"store now {store.total_bytes()} bytes")
-print("OK: exactly-once + rollback + reclamation all hold")
+print("OK: exactly-once + aligned model/data recovery + reclamation all hold")

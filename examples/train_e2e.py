@@ -1,12 +1,15 @@
-"""End-to-end driver: train a decoder LM fed through the unified dataplane
-facade, with checkpoints, watermark-driven reclamation, and a mid-run restart
-that resumes the exact batch sequence.
+"""End-to-end driver: train a decoder LM fed through the checkpoint-aligned
+``TrainSession`` — model state and data cursors are bound atomically in one
+RunManifest commit, reclamation trims only below the last aligned checkpoint,
+and a mid-run restart (optionally at a resized DP degree) resumes the exact
+batch sequence.
 
 Default profile trains a ~8M-param model for 60 steps in a couple of minutes on
 CPU; ``--profile 100m --steps 300`` is the full assignment-scale run (same
 code, bigger config — budget hours on CPU).
 
 Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 60] [--profile small]
+      [--restart-at 30 [--restart-dp 4]]
 """
 import argparse
 import threading
@@ -19,9 +22,9 @@ import numpy as np
 from repro.core import MemoryObjectStore
 from repro.core.dac import DACPolicy
 from repro.data import PipelineConfig, PreprocessConfig, PreprocessWorker
-from repro.dataplane import Checkpoint, Topology, open_dataplane
+from repro.dataplane import Topology
 from repro.models import ModelConfig, init_params, param_specs
-from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.run import TrainSession
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 from repro.train.step import StepConfig, make_train_step
 
@@ -32,6 +35,28 @@ PROFILES = {
                  d_ff=2560, vocab_size=32000, gb=8, seq=512),
 }
 
+NAMESPACE = "runs/train_e2e"
+
+
+def start_producers(session: TrainSession, pc: PipelineConfig,
+                    stop: threading.Event):
+    """Disaggregated preprocessing workers (background threads). Writers are
+    vended by the session, so after an elastic restart they keep
+    materializing at the run's original layout."""
+    def producer_thread(pid: int):
+        with session.writer(f"w{pid}", policy=DACPolicy(), max_lag=64) as w:
+            worker = PreprocessWorker(pc, PreprocessConfig(), w.producer,
+                                      sample_stride=2, sample_offset=pid)
+            while not stop.is_set():
+                worker.produce_n_tgbs(4, stop=stop)
+                w.flush()
+
+    threads = [threading.Thread(target=producer_thread, args=(i,), daemon=True)
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    return threads
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -39,7 +64,10 @@ def main():
     ap.add_argument("--profile", default="small", choices=list(PROFILES))
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--restart-at", type=int, default=None,
-                    help="simulate a crash+restore at this step")
+                    help="simulate a crash+aligned-restore at this step")
+    ap.add_argument("--restart-dp", type=int, default=None,
+                    help="resume on this DP degree (elastic factor resize; "
+                         "default: same topology)")
     args = ap.parse_args()
     prof = PROFILES[args.profile]
     dp = 2
@@ -55,26 +83,11 @@ def main():
 
     store = MemoryObjectStore()
     topo = Topology(dp=dp, cp=1, global_batch=prof["gb"], seq_len=prof["seq"])
-    session = open_dataplane(store, topo, backend="tgb",
-                             namespace="runs/train_e2e")
+    session = TrainSession(store, topo, namespace=NAMESPACE)
     pc = PipelineConfig(global_batch=prof["gb"], seq_len=prof["seq"], dp=dp,
                         cp=1, vocab_size=cfg.vocab_size, seed=17)
-
-    # -- disaggregated producers (background threads) -------------------------
     stop = threading.Event()
-
-    def producer_thread(pid: int):
-        with session.writer(f"w{pid}", policy=DACPolicy(), max_lag=64) as w:
-            worker = PreprocessWorker(pc, PreprocessConfig(), w.producer,
-                                      sample_stride=2, sample_offset=pid)
-            while not stop.is_set():
-                worker.produce_n_tgbs(4, stop=stop)
-                w.flush()
-
-    threads = [threading.Thread(target=producer_thread, args=(i,), daemon=True)
-               for i in range(2)]
-    for t in threads:
-        t.start()
+    threads = start_producers(session, pc, stop)
 
     # -- trainer ----------------------------------------------------------------
     params = init_params(param_specs(cfg), seed=0)
@@ -98,25 +111,34 @@ def main():
         losses.append(float(metrics["loss"]))
         s += 1
         if s % args.ckpt_every == 0:
-            save_checkpoint(session.ns, step=s,
-                            state={"params": params, "opt": opt},
-                            cursor=readers[0].checkpoint().as_tuple(),
-                            consumer_ranks=list(range(dp)))
+            # ONE commit binds model state + every rank's data cursor
+            entry = session.checkpoint({"params": params, "opt": opt})
             reclaimed = session.reclaim()
             print(f"step {s:4d} loss={losses[-1]:.3f} "
                   f"lr={float(metrics['lr']):.2e} "
+                  f"aligned@{entry.step} (seq {entry.seq}) "
                   f"store={store.total_bytes() / 2**20:.1f}MiB "
                   f"reclaimed={reclaimed} tgbs "
                   f"({(time.time() - t0) / s:.2f}s/step)")
         if args.restart_at is not None and s == args.restart_at:
-            print(f"--- simulating trainer crash at step {s}; restoring ---")
-            template = {"params": params, "opt": opt}
-            state, cursor, ckpt_step = restore_checkpoint(session.ns, template)
+            new_dp = args.restart_dp or dp
+            print(f"--- simulating trainer crash at step {s}; aligned "
+                  f"restore at dp={new_dp} ---")
+            new_topo = None
+            if new_dp != dp:
+                new_topo = Topology(dp=new_dp, cp=1,
+                                    global_batch=prof["gb"] * new_dp // dp,
+                                    seq_len=prof["seq"])
+            session.close()
+            session = TrainSession.resume(store, NAMESPACE,
+                                          topology=new_topo)
+            state = session.restore_model({"params": params, "opt": opt})
             params, opt = state["params"], state["opt"]
-            token = Checkpoint("tgb", version=cursor[0], step=cursor[1])
-            for r in readers:
-                r.restore(token)
-            s = ckpt_step
+            readers = [session.reader(dp_rank=d, prefetch_depth=4)
+                       for d in range(new_dp)]
+            s = session.resume_step
+            print(f"resumed at logical step {s} "
+                  f"(RunManifest seq {session.last_entry.seq})")
             args.restart_at = None
 
     stop.set()

@@ -15,15 +15,21 @@ Protocol points covered:
   reclaimer_midtrim_kill         reclaimer dies halfway through deletion
   cput_conflict_storm            3 producers × injected 5xx/lost-ack commits
   flaky_reads                    consumer under 5xx / short / stale reads
+  trainer_midcheckpoint_kill     trainer dies between model upload and its
+                                 RunManifest commit (aligned recovery)
 """
 from __future__ import annotations
 
 import threading
 
+import numpy as np
+
 from repro.core import (Consumer, FaultPolicy, FaultyObjectStore,
                         InjectedCrash, ManifestStore, MemoryObjectStore,
                         MeshPosition, Namespace, Producer, Reclaimer,
                         Watermark, write_watermark)
+from repro.dataplane import Topology
+from repro.run import TrainSession
 from repro.chaos.harness import (CHAOS_PREFIX, ScenarioResult,
                                  assert_all_ranks_converge,
                                  assert_exactly_once, audit_and_repair,
@@ -300,3 +306,66 @@ def flaky_reads(seed: int = 0) -> ScenarioResult:
                           faults_injected=store.fault_stats.total,
                           fsck_clean_after=True,
                           detail=f"{cons.stats.read_retries} read retries")
+
+
+@scenario("trainer_midcheckpoint_kill")
+def trainer_midcheckpoint_kill(seed: int = 0) -> ScenarioResult:
+    """Kill the trainer *between* the model-state upload and the RunManifest
+    commit — the exact window that silently broke exactly-once when model
+    and data cursors were two separate saves. The RunManifest makes the
+    commit the atom: recovery resumes from the previous *aligned* checkpoint
+    (old model + old cursor together), replays the lost window
+    byte-identically, and the half-uploaded model surfaces as a safe orphan
+    once a later aligned checkpoint supersedes it."""
+    from repro.core import FaultInjector
+
+    n = 12
+    store = MemoryObjectStore(faults=FaultInjector())
+    ns = Namespace(store, CHAOS_PREFIX)
+    p = Producer(ns, "P", dp=1, cp=1)
+    p.recover()
+    produce_range(p, n)
+
+    sess = TrainSession(store, Topology(dp=1, cp=1), namespace=CHAOS_PREFIX)
+    r = sess.reader(0, 0)
+    seen = [r.next_batch(timeout_s=10).payload for _ in range(4)]
+    state1 = {"w": np.arange(8, dtype=np.float32) + seed}
+    entry = sess.checkpoint(state1)            # aligned @ step 4 (seq 0)
+    assert entry.step == 4
+    lost = [r.next_batch(timeout_s=10).payload for _ in range(2)]  # steps 4,5
+
+    # the fatal window: model for step 6 uploads, the RunManifest put dies
+    store.faults.crash_on("cput", key_substr=".rm", nth=1, phase="before")
+    try:
+        sess.checkpoint({"w": state1["w"] * -1.0})
+        raise AssertionError("crash between upload and commit never fired")
+    except InjectedCrash:
+        pass
+    store.faults = None
+
+    t0 = now()
+    sess2 = TrainSession.resume(store, CHAOS_PREFIX)
+    assert sess2.resume_step == 4, \
+        f"resume landed at {sess2.resume_step}, not the aligned step 4"
+    state = sess2.restore_model({"w": np.zeros(8, dtype=np.float32)})
+    assert np.array_equal(np.asarray(state["w"]), state1["w"]), \
+        "restored model is not the aligned (pre-crash) state"
+    r2 = sess2.reader(0, 0)
+    replay = [r2.next_batch(timeout_s=10).payload for _ in range(n - 4)]
+    recovery_latency = now() - t0
+
+    assert replay[:2] == lost, "post-checkpoint window did not replay " \
+                               "byte-identically"
+    assert_exactly_once(seen + replay, "P", 0, 0, n)
+
+    # a later aligned checkpoint supersedes the torn step-6 upload; fsck then
+    # flags it as a safe orphan and repairs to clean
+    sess2.checkpoint(state)
+    orphans, clean = audit_and_repair(ns)
+    assert orphans >= 1, "expected the torn model upload to surface as orphan"
+    assert clean, "fsck not clean after repair"
+    return ScenarioResult(name="trainer_midcheckpoint_kill", passed=True,
+                          steps_delivered=n,
+                          recovery_latency_s=recovery_latency,
+                          orphans_detected=orphans, faults_injected=1,
+                          fsck_clean_after=True)

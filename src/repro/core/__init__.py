@@ -16,7 +16,9 @@ Public surface:
 from repro.core.clock import Clock, SystemClock, VirtualClock
 from repro.core.commit import CommitProtocol, CommitResult
 from repro.core.errors import BatchTimeout, TransientStoreError
-from repro.core.consumer import Consumer, ConsumerStats, MeshPosition, remap_step
+from repro.core.consumer import (Consumer, ConsumerStats, MeshPosition,
+                                 convert_logical_step, floor_to_data_step,
+                                 remap_step)
 from repro.core.faults import FaultPolicy, FaultStats, FaultyObjectStore
 from repro.core.dac import (AIMDPolicy, CommitPolicy, DACConfig, DACPolicy,
                             FixedCountPolicy, IncrPolicy, NaivePolicy,
@@ -41,7 +43,8 @@ __all__ = [
     "Clock", "SystemClock", "VirtualClock",
     "FaultPolicy", "FaultStats", "FaultyObjectStore",
     "CommitProtocol", "CommitResult",
-    "Consumer", "ConsumerStats", "MeshPosition", "remap_step",
+    "Consumer", "ConsumerStats", "MeshPosition", "convert_logical_step",
+    "floor_to_data_step", "remap_step",
     "AIMDPolicy", "CommitPolicy", "DACConfig", "DACPolicy", "FixedCountPolicy",
     "IncrPolicy", "NaivePolicy", "make_policy",
     "Reclaimer", "Watermark", "global_watermark", "read_trim_marker",

@@ -107,6 +107,37 @@ def remap_step(logical_step: int, pos: MeshPosition,
     return step, td, tc
 
 
+def convert_logical_step(step: int, from_dp: int, to_dp: int) -> int:
+    """Convert a logical step count between DP topologies that differ by an
+    integer factor (§4.1 elastic restore).
+
+    A logical step at DP degree ``d`` consumes ``d`` batch slices of the
+    materialized stream, so ``step`` logical steps at ``from_dp`` occupy
+    ``step * from_dp`` slices; the same position expressed at ``to_dp`` is
+    ``step * from_dp / to_dp``. Raises ``ValueError`` when the degrees are
+    not an integer factor apart, or when the position does not land on a
+    ``to_dp`` global-batch boundary (the cursor would split a batch).
+    """
+    if from_dp < 1 or to_dp < 1:
+        raise ValueError(f"DP degrees must be >= 1, got {from_dp} -> {to_dp}")
+    if max(from_dp, to_dp) % min(from_dp, to_dp):
+        raise ValueError(
+            f"DP resize {from_dp} -> {to_dp} is not an integer factor")
+    slices = step * from_dp
+    if slices % to_dp:
+        raise ValueError(
+            f"step {step} at dp={from_dp} ({slices} slices) does not land on "
+            f"a dp={to_dp} global-batch boundary")
+    return slices // to_dp
+
+
+def floor_to_data_step(step: int, dp: int, data_dp: int) -> int:
+    """A logical cursor position in *materialized* (TGB-layout) units,
+    floored — the resize-invariant unit retention/trim decisions use. A
+    mid-boundary cursor can only round down, i.e. under-trim."""
+    return (step * dp) // max(1, data_dp)
+
+
 class Consumer:
     """One training rank's BatchWeave consumer client."""
 

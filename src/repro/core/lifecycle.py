@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import msgpack
 
@@ -92,6 +92,14 @@ class ReclaimStats:
 class Reclaimer:
     """Background reclamation driven by checkpoint watermarks.
 
+    The safety boundary comes from ``watermark_source`` when one is given —
+    the RunManifest-aligned path: the run subsystem supplies a closure that
+    reads the last *committed* RunManifest entry, so reclamation is tied to
+    the unified model+data checkpoint rather than free-floating per-rank
+    cursor files. Without a source it falls back to ``W_global = min_i(W_i)``
+    over the per-rank watermark objects (the pre-RunManifest protocol, still
+    what bare data-plane sessions use).
+
     Failure of this process delays reclamation but never affects correctness:
     deletions are idempotent, TGB objects immutable, and the trim marker only
     ever advances.
@@ -99,11 +107,14 @@ class Reclaimer:
 
     def __init__(self, ns: Namespace, expected_ranks: Optional[int] = None,
                  physical_delete: bool = True,
-                 manifests: Optional[ManifestStore] = None):
+                 manifests: Optional[ManifestStore] = None,
+                 watermark_source: Optional[
+                     Callable[[], Optional[Watermark]]] = None):
         self.ns = ns
         self.store = ns.store
         self.expected_ranks = expected_ranks
         self.physical_delete = physical_delete
+        self.watermark_source = watermark_source
         self.manifests = manifests or ManifestStore(ns)
         self.stats = ReclaimStats()
         self._stop = threading.Event()
@@ -122,7 +133,10 @@ class Reclaimer:
     # -- one reclamation cycle --------------------------------------------------
     def run_cycle(self) -> Optional[Watermark]:
         self.stats.cycles += 1
-        wg = global_watermark(self.ns, self.expected_ranks)
+        if self.watermark_source is not None:
+            wg = self.watermark_source()
+        else:
+            wg = global_watermark(self.ns, self.expected_ranks)
         if wg is None:
             return None
         prev_step, prev_version = self.read_trim()

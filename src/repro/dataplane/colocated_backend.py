@@ -78,13 +78,25 @@ class ColocatedBatchReader:
                      array=np.asarray(items, dtype=np.int32)[None, :])
 
     def checkpoint(self) -> Checkpoint:
-        return Checkpoint("colocated", version=-1, step=self.step)
+        return Checkpoint("colocated", version=-1, step=self.step,
+                          topology=(self.topology.dp, self.topology.cp))
 
     def restore(self, ckpt: "Checkpoint | str") -> None:
         ckpt = Checkpoint.coerce(ckpt)
         if ckpt.backend != "colocated":
             raise ValueError(f"cannot restore a {ckpt.backend!r} checkpoint "
                              f"on a colocated reader")
+        here = (self.topology.dp, self.topology.cp)
+        if ckpt.topology is not None and tuple(ckpt.topology) != here:
+            # the queue is per-node and volatile: a step counter from a
+            # different mesh shape has no meaning here, so refuse loudly
+            raise UnsupportedOperation(
+                f"colocated backend cannot restore a checkpoint captured at "
+                f"dp={ckpt.topology[0]} cp={ckpt.topology[1]} onto a "
+                f"dp={here[0]} cp={here[1]} reader: the in-rank pipeline has "
+                f"no topology remap. Factor DP resize is supported only by "
+                f"the tgb backend's elastic restore path "
+                f"(TGBBatchReader.restore / TrainSession.resume)")
         # volatile queue: the counter moves but past batches are gone — the
         # baseline cannot replay (the paper's consistency argument)
         self.step = ckpt.step

@@ -26,7 +26,8 @@ from repro.core.tgb import TGBBuilder, build_uniform_tgb
 from repro.data.mq import (BrokerConfig, KafkaSimBroker, KafkaTGBConsumer,
                            KafkaTGBProducer)
 from repro.dataplane._base import PackingWriterMixin, SessionBase
-from repro.dataplane.types import Batch, Checkpoint, Topology
+from repro.dataplane.types import (Batch, Checkpoint, Topology,
+                                   UnsupportedOperation)
 
 
 class MQWriter(PackingWriterMixin):
@@ -109,13 +110,26 @@ class MQBatchReader:
                            topology=self.topology)
 
     def checkpoint(self) -> Checkpoint:
-        return Checkpoint("mq", version=-1, step=self.consumer.offset)
+        return Checkpoint("mq", version=-1, step=self.consumer.offset,
+                          topology=(self.topology.dp, self.topology.cp))
 
     def restore(self, ckpt: "Checkpoint | str") -> None:
         ckpt = Checkpoint.coerce(ckpt)
         if ckpt.backend != "mq":
             raise ValueError(f"cannot restore a {ckpt.backend!r} checkpoint "
                              f"on an mq reader")
+        here = (self.topology.dp, self.topology.cp)
+        if ckpt.topology is not None and tuple(ckpt.topology) != here:
+            # a broker offset has no (step, rank) -> (offset, slice) remap:
+            # reinterpreting it under a different D x C silently misreads
+            # slices, so refuse instead
+            raise UnsupportedOperation(
+                f"mq backend cannot restore a checkpoint captured at "
+                f"dp={ckpt.topology[0]} cp={ckpt.topology[1]} onto a "
+                f"dp={here[0]} cp={here[1]} reader: the record/offset "
+                f"abstraction has no topology remap. Factor DP resize is "
+                f"supported only by the tgb backend's elastic restore path "
+                f"(TGBBatchReader.restore / TrainSession.resume)")
         self.consumer.offset = ckpt.step
 
     def close(self) -> None:

@@ -17,14 +17,16 @@ from __future__ import annotations
 
 from typing import List, Optional
 
-from repro.core.consumer import Consumer, MeshPosition
+from repro.core.consumer import (Consumer, MeshPosition,
+                                 convert_logical_step, floor_to_data_step)
 from repro.core.dac import CommitPolicy
 from repro.core.lifecycle import Reclaimer, Watermark, write_watermark
 from repro.core.manifest import ManifestStore
 from repro.core.objectstore import IOPool, Namespace, ObjectStore
 from repro.core.producer import Producer
 from repro.dataplane._base import PackingWriterMixin, SessionBase
-from repro.dataplane.types import Batch, Checkpoint, Topology
+from repro.dataplane.types import (Batch, Checkpoint, Topology,
+                                   UnsupportedOperation)
 
 
 class TGBWriter(PackingWriterMixin):
@@ -110,9 +112,27 @@ class TGBBatchReader:
 
     def checkpoint(self) -> Checkpoint:
         v, s = self.consumer.cursor
-        return Checkpoint("tgb", version=v, step=s)
+        return Checkpoint("tgb", version=v, step=s,
+                          topology=(self.topology.dp, self.topology.cp),
+                          data_dp=self._data_dp())
+
+    def _data_dp(self) -> int:
+        """The materialized TGB layout's DP degree (falls back to the
+        consuming topology before the first manifest is visible)."""
+        if self.consumer.view.tgbs:
+            return self.consumer.view.tgbs[0].dp
+        return self.topology.dp
 
     def restore(self, ckpt: "Checkpoint | str") -> None:
+        """Resume from a captured cursor — including one captured on a mesh
+        whose DP degree differs from this reader's by an integer factor.
+
+        The cursor's logical step is converted through the slice position
+        (``step * dp_capture / dp_here``, exact); the per-slice remap itself
+        happens inside the core consumer against the *materialized* layout,
+        so no data is rewritten. Misaligned or non-integer-factor resizes
+        raise ``UnsupportedOperation``.
+        """
         ckpt = Checkpoint.coerce(ckpt)
         if ckpt.backend != "tgb":
             raise ValueError(f"cannot restore a {ckpt.backend!r} checkpoint "
@@ -121,7 +141,23 @@ class TGBBatchReader:
             raise ValueError("composite multi-stream checkpoint cannot be "
                              "restored on a single-stream reader (open the "
                              "session with streams={...})")
-        self.consumer.restore_cursor(ckpt.version, ckpt.step)
+        step = ckpt.step
+        if ckpt.topology is not None:
+            # CP changes never move the step cursor (token chunks live inside
+            # a step); only the DP degree rescales logical steps.
+            cap_dp = ckpt.topology[0]
+            if cap_dp != self.topology.dp:
+                try:
+                    step = convert_logical_step(ckpt.step, cap_dp,
+                                                self.topology.dp)
+                except ValueError as e:
+                    raise UnsupportedOperation(
+                        f"cannot restore a dp={cap_dp} checkpoint on a "
+                        f"dp={self.topology.dp} reader: {e}. Supported "
+                        f"elastic path: integer-factor DP resize with the "
+                        f"checkpoint on a global-batch boundary of the new "
+                        f"degree") from e
+        self.consumer.restore_cursor(ckpt.version, step)
 
     def poll(self) -> bool:
         """Probe for newly published batches; True if the view advanced."""
@@ -153,12 +189,17 @@ class TGBSession(SessionBase):
                  namespace: str = "runs/dataplane",
                  resume: "Checkpoint | str | None" = None,
                  expected_ranks: Optional[int] = None,
-                 io_pool: Optional[IOPool] = None):
+                 io_pool: Optional[IOPool] = None,
+                 data_topology: Optional[Topology] = None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
         self.store = store
         self.topology = topology
+        # the layout producers materialize TGBs at; defaults to the consuming
+        # topology, but an elastically-resumed run pins it to the run's
+        # original D x C so the stream layout stays uniform across restarts
+        self.data_topology = data_topology or topology
         self.ns = Namespace(store, namespace)
         # one pool per session: all of this session's readers/writers share
         # its bounded in-flight request budget (None -> the process default)
@@ -173,7 +214,7 @@ class TGBSession(SessionBase):
                policy: Optional[CommitPolicy] = None,
                max_lag: Optional[int] = None,
                pipeline_commits: bool = False) -> TGBWriter:
-        return TGBWriter(self.ns, self.topology, writer_id, policy=policy,
+        return TGBWriter(self.ns, self.data_topology, writer_id, policy=policy,
                          max_lag=max_lag, pipeline_commits=pipeline_commits,
                          io_pool=self._io_pool)
 
@@ -198,8 +239,16 @@ class TGBSession(SessionBase):
                 "composite multi-stream checkpoint cannot be used as a "
                 "single-stream watermark (its step is the global mixed step; "
                 "use the multi-stream session's save_watermark)")
+        # Watermarks gate TGB deletion, so their step must be in the
+        # *materialized* layout's units. A token captured on a resized mesh
+        # carries its capture topology; convert (flooring is conservative —
+        # it can only under-trim).
+        step = ckpt.step
+        if ckpt.topology is not None and ckpt.data_dp:
+            step = floor_to_data_step(ckpt.step, ckpt.topology[0],
+                                      ckpt.data_dp)
         write_watermark(self.ns, rank,
-                        Watermark(version=ckpt.version, step=ckpt.step))
+                        Watermark(version=ckpt.version, step=step))
 
     def reclaim(self) -> int:
         """One watermark-driven reclamation cycle; returns TGBs deleted so far."""

@@ -139,7 +139,10 @@ class Batch:
                      stream=stream)
 
 
-_CKPT_MAGIC = "bwck1"
+#: Current token schema tag. v1 (``bwck1``) predates the RunManifest /
+#: elastic-restore work and carried no capture topology; v2 adds it.
+_CKPT_MAGIC = "bwck2"
+_RETIRED_MAGICS = ("bwck1",)
 
 
 @dataclass(frozen=True)
@@ -158,6 +161,19 @@ class Checkpoint:
     ``<V, S>`` cursor as ``(name, version, step)`` triples sorted by name.
     Single-stream tokens have ``streams=None`` and decode unchanged.
 
+    ``topology`` records the capturing mesh's ``(dp, cp)``: the tgb backend
+    uses it to remap the cursor onto a factor-resized mesh on restore, and
+    the mq/colocated backends use it to *refuse* such a restore loudly
+    instead of silently misreading slices. ``data_dp`` is the materialized
+    TGB layout's DP degree at capture (the invariant unit elastic restores
+    convert through) and ``mix_pos`` the composite token's mix position in
+    those materialized units. All three are ``None`` on hand-built tokens,
+    which restore positionally exactly as before.
+
+    The wire format is versioned by a schema tag: tokens from a retired
+    schema decode with a clear "re-checkpoint" error instead of a field
+    ``KeyError`` deep inside a restore.
+
     Example — the save/restore round trip::
 
         token = reader.checkpoint().encode()       # str, store it anywhere
@@ -174,6 +190,9 @@ class Checkpoint:
     version: int
     step: int
     streams: Optional[Tuple[Tuple[str, int, int], ...]] = None
+    topology: Optional[Tuple[int, int]] = None  # (dp, cp) at capture
+    data_dp: Optional[int] = None   # materialized TGB layout DP at capture
+    mix_pos: Optional[int] = None   # composite: mix position in data units
 
     @property
     def composite(self) -> bool:
@@ -191,6 +210,12 @@ class Checkpoint:
                "v": self.version, "s": self.step}
         if self.streams is not None:
             doc["st"] = [list(row) for row in self.streams]
+        if self.topology is not None:
+            doc["tp"] = list(self.topology)
+        if self.data_dp is not None:
+            doc["dd"] = self.data_dp
+        if self.mix_pos is not None:
+            doc["mu"] = self.mix_pos
         raw = msgpack.packb(doc)
         return base64.urlsafe_b64encode(raw).decode("ascii")
 
@@ -199,13 +224,26 @@ class Checkpoint:
         try:
             d = msgpack.unpackb(base64.urlsafe_b64decode(token.encode("ascii")),
                                 raw=False)
-            if d.get("m") != _CKPT_MAGIC:
-                raise ValueError("bad magic")
+        except Exception as e:
+            raise ValueError(
+                f"not a dataplane Checkpoint token: {token!r}") from e
+        magic = d.get("m") if isinstance(d, dict) else None
+        if magic in _RETIRED_MAGICS:
+            raise ValueError(
+                f"checkpoint token uses the retired {magic!r} schema "
+                f"(pre-RunManifest, no capture topology); current schema is "
+                f"{_CKPT_MAGIC!r} — re-checkpoint the run to mint a "
+                f"restorable token")
+        if magic != _CKPT_MAGIC:
+            raise ValueError(f"not a dataplane Checkpoint token: {token!r}")
+        try:
             streams = None
             if d.get("st") is not None:
                 streams = tuple(tuple(row) for row in d["st"])
+            topology = tuple(d["tp"]) if d.get("tp") is not None else None
             return Checkpoint(backend=d["b"], version=d["v"], step=d["s"],
-                              streams=streams)
+                              streams=streams, topology=topology,
+                              data_dp=d.get("dd"), mix_pos=d.get("mu"))
         except Exception as e:
             raise ValueError(f"not a dataplane Checkpoint token: {token!r}") from e
 

@@ -184,6 +184,21 @@ def _print_inspect(info: dict, out, indent: str = "") -> None:
     if info["trim"]:
         print(f"{indent}  trim marker: safe_step={info['trim']['safe_step']} "
               f"safe_version={info['trim']['safe_version']}", file=out)
+    rm = info.get("runmanifest")
+    if rm:
+        if "error" in rm:
+            print(f"{indent}  runmanifest: {rm['entries']} entries, latest "
+                  f"seq {rm['latest']} UNREADABLE ({rm['error']})", file=out)
+        else:
+            a = rm["aligned"]
+            print(f"{indent}  runmanifest: {rm['entries']} entries; aligned "
+                  f"@ step {a['step']} (dp={a['topology'][0]} "
+                  f"cp={a['topology'][1]}, data_dp={a['data_dp']}, "
+                  f"data_step={a['data_step']}) model={a['model_key']}",
+                  file=out)
+            for sname, cur in (a["streams"] or {}).items():
+                print(f"{indent}    stream {sname!r} cursor: "
+                      f"v{cur['version']} step={cur['step']}", file=out)
     for name, sub in sorted(info.get("streams", {}).items()):
         print(f"{indent}  stream {name!r}:", file=out)
         _print_inspect(sub, out, indent=indent + "  ")

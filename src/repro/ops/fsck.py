@@ -22,6 +22,14 @@ Checks performed per namespace (and recursively per stream):
     checkpoint watermark (else a restoring rank could find its steps
     reclaimed), the latest view's ``base_step`` must not exceed it either,
     and every watermark's manifest version must still be retained.
+  * **RunManifest alignment** — on runs with a RunManifest: the entry chain
+    must be contiguous and decodable; the latest entry's model checkpoint
+    must exist intact (MANIFEST + every leaf at its recorded size); its data
+    cursor must decode and still be restorable (manifest version retained,
+    trim marker at or below the aligned step — per stream on multi-stream
+    runs); and model uploads no entry ever named (a trainer killed between
+    upload and commit) surface as safe orphans once a later entry
+    supersedes them.
 """
 from __future__ import annotations
 
@@ -29,11 +37,14 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import msgpack
+import numpy as np
 
 from repro.core.lifecycle import read_trim_marker, read_watermarks
 from repro.core.manifest import (MANIFEST_FORMAT_FLAT, DatasetView,
                                  ManifestStore)
 from repro.core.objectstore import Namespace, NoSuchKey
+from repro.dataplane.types import Checkpoint
+from repro.run.manifest import RunManifestError, RunManifestStore
 
 __all__ = ["FsckIssue", "FsckReport", "fsck", "list_streams"]
 
@@ -273,12 +284,187 @@ def _check_trim_skew(ns: Namespace, view: Optional[DatasetView],
             f"trim marker at safe_step={trim[0]} but no watermarks exist"))
 
 
+def _stream_retained_versions(ns: Namespace, name: str) -> List[int]:
+    return _manifest_versions(ns.stream(name))
+
+
+def _check_runmanifest(ns: Namespace, versions: List[int],
+                       report: FsckReport) -> None:
+    """RunManifest <-> manifest <-> trim-marker consistency (aligned
+    recovery): the latest committed entry must actually be restorable."""
+    runs = RunManifestStore(ns)
+    seqs = runs.seqs()
+    if not seqs:
+        return  # bare data-plane namespace: nothing aligned to audit
+    for prev, cur in zip(seqs, seqs[1:]):
+        if cur != prev + 1:
+            report.issues.append(FsckIssue(
+                "error", "torn-runmanifest-chain", runs.key(prev + 1),
+                f"RunManifest sequence jumps {prev} -> {cur}"))
+    entries = {}
+    for seq in seqs:
+        try:
+            entries[seq] = runs.read(seq)
+        except RunManifestError as e:
+            report.issues.append(FsckIssue(
+                "error", "corrupt-runmanifest", runs.key(seq), str(e)))
+    latest = entries.get(seqs[-1])
+    if latest is not None:
+        _check_aligned_entry(ns, latest, versions, report, runs)
+    _check_model_orphans(ns, entries, report)
+
+
+def _check_aligned_entry(ns: Namespace, rm, versions: List[int],
+                         report: FsckReport, runs) -> None:
+    # -- model pointer intact -------------------------------------------------
+    if rm.model_key:
+        try:
+            doc = msgpack.unpackb(ns.store.get(rm.model_key), raw=False)
+        except (KeyError, NoSuchKey):
+            report.issues.append(FsckIssue(
+                "error", "missing-model-checkpoint", rm.model_key,
+                f"RunManifest seq={rm.seq} binds a model checkpoint that is "
+                f"absent from the store"))
+            doc = None
+        except Exception as e:
+            report.issues.append(FsckIssue(
+                "error", "torn-model-checkpoint", rm.model_key,
+                f"cannot decode: {type(e).__name__}: {e}"))
+            doc = None
+        for e in (doc or {}).get("leaves", []):
+            try:
+                size = ns.store.head(e["key"])
+            except (KeyError, NoSuchKey):
+                report.issues.append(FsckIssue(
+                    "error", "torn-model-checkpoint", e["key"],
+                    f"leaf listed by {rm.model_key} is missing"))
+                continue
+            try:
+                want = 1
+                for dim in e["shape"]:
+                    want *= dim
+                want *= np.dtype(e["dtype"]).itemsize
+            except Exception:
+                continue  # extended dtype not decodable here: existence is enough
+            if size != want:
+                report.issues.append(FsckIssue(
+                    "error", "torn-model-checkpoint", e["key"],
+                    f"leaf is {size} B, MANIFEST records "
+                    f"{e['shape']}/{e['dtype']} = {want} B"))
+    # -- data cursor restorable ----------------------------------------------
+    try:
+        ck = Checkpoint.decode(rm.data_token)
+    except ValueError as e:
+        report.issues.append(FsckIssue(
+            "error", "runmanifest-bad-cursor", runs.key(rm.seq), str(e)))
+        return
+    if ck.composite:
+        for name, v, s in ck.streams:
+            sns = ns.stream(name)
+            retained = _stream_retained_versions(ns, name)
+            if v >= 0 and (not retained or v < retained[0]
+                           or v > retained[-1]):
+                have = (f"retained versions are "
+                        f"v{retained[0]}..v{retained[-1]}" if retained
+                        else "no manifest versions are retained")
+                report.issues.append(FsckIssue(
+                    "error", "runmanifest-unreadable-cursor",
+                    sns.manifest_key(v),
+                    f"aligned cursor of stream {name!r} needs manifest v{v} "
+                    f"but {have}: the aligned checkpoint cannot restore"))
+            trim = read_trim_marker(sns)
+            if trim is not None and trim[0] > s:
+                report.issues.append(FsckIssue(
+                    "error", "trim-skew", sns.trim_key(),
+                    f"stream {name!r} trim marker safe_step={trim[0]} passed "
+                    f"the aligned checkpoint's stream step {s}"))
+    else:
+        if ck.version >= 0 and (not versions or ck.version < versions[0]
+                                or ck.version > versions[-1]):
+            have = (f"retained versions are v{versions[0]}..v{versions[-1]}"
+                    if versions else "no manifest versions are retained")
+            report.issues.append(FsckIssue(
+                "error", "runmanifest-unreadable-cursor",
+                ns.manifest_key(ck.version),
+                f"aligned cursor needs manifest v{ck.version} but {have}: "
+                f"the aligned checkpoint cannot restore"))
+        trim = read_trim_marker(ns)
+        if trim is not None and trim[0] > rm.aligned_data_step():
+            report.issues.append(FsckIssue(
+                "error", "trim-skew", ns.trim_key(),
+                f"trim marker safe_step={trim[0]} passed the aligned "
+                f"checkpoint's data step {rm.aligned_data_step()}: an "
+                f"aligned restore would find its batches reclaimed"))
+
+
+def _check_model_orphans(ns: Namespace, entries: Dict[int, object],
+                         report: FsckReport) -> None:
+    """Model uploads never named by any RunManifest entry: a trainer killed
+    between upload and commit. Superseded ones (below the latest bound
+    position) are safe to delete; newer ones may be a live trainer
+    mid-commit.
+
+    Directory steps and entry positions are compared in *materialized*
+    units — the unit TrainSession names directories in, invariant across
+    elastic resizes — so a resized trainer's in-flight upload is never
+    misjudged against a pre-resize entry's logical step.
+    """
+    from repro.train.checkpoint import checkpoint_dir_step
+
+    if not entries:
+        return
+    referenced = {rm.model_key for rm in entries.values() if rm.model_key}
+    # steps at which SOME entry bound a (possibly retry-tagged) directory: an
+    # unbound sibling dir at such a step lost its commit race — a later
+    # incarnation re-checkpointed the same cadence step — and is superseded
+    # just as surely as one below the latest bound position
+    bound_steps = set()
+    for mkey in referenced:
+        s = checkpoint_dir_step(mkey.split("/")[-2])
+        if s is not None:
+            bound_steps.add(s)
+    latest_bound = -1
+    for rm in entries.values():
+        try:
+            latest_bound = max(latest_bound, rm.aligned_data_step())
+        except ValueError:
+            pass  # undecodable cursor is reported by _check_aligned_entry
+    by_dir: Dict[str, List[str]] = {}
+    for key in ns.store.list(ns.key("checkpoints")):
+        by_dir.setdefault(key.rsplit("/", 1)[0], []).append(key)
+    for dirkey, keys in sorted(by_dir.items()):
+        mkey = f"{dirkey}/MANIFEST.ckpt"
+        if mkey in referenced:
+            continue
+        step = checkpoint_dir_step(dirkey.rsplit("/", 1)[-1])
+        superseded = step is not None and (
+            (latest_bound >= 0 and step < latest_bound)
+            or step in bound_steps)
+        if superseded:
+            report.orphans.extend(sorted(keys))
+            report.issues.append(FsckIssue(
+                "warn", "orphan-model-checkpoint", dirkey,
+                f"model upload at data step {step} was never bound by a "
+                f"RunManifest entry and is superseded by a bound checkpoint "
+                f"at data step "
+                f"{step if step in bound_steps else latest_bound} "
+                f"(safe to delete)"))
+        else:
+            report.pending.extend(sorted(keys))
+            report.issues.append(FsckIssue(
+                "warn", "pending-model-checkpoint", dirkey,
+                f"model upload not (yet) bound by any RunManifest entry — "
+                f"either a live trainer mid-commit or a crashed one's "
+                f"leftover (not touched)"))
+
+
 def fsck(ns: Namespace, repair: bool = False,
          recurse_streams: bool = True) -> FsckReport:
     """Audit one run namespace through the storage layer alone.
 
-    ``repair=True`` deletes the *safely* orphaned TGB objects (superseded
-    duplicates below their producer's committed offset) — never pending ones,
+    ``repair=True`` deletes the *safely* orphaned objects (superseded
+    duplicate TGBs below their producer's committed offset, and model
+    uploads superseded by a later RunManifest entry) — never pending ones,
     never manifests. Returns the full :class:`FsckReport`.
     """
     report = FsckReport(namespace=ns.prefix)
@@ -286,6 +472,7 @@ def fsck(ns: Namespace, repair: bool = False,
     view = _check_chain(ns, versions, report)
     _check_tgbs(ns, view, report)
     _check_trim_skew(ns, view, versions, report)
+    _check_runmanifest(ns, versions, report)
     if repair and report.orphans:
         for key in list(report.orphans):
             ns.store.delete(key)

@@ -17,6 +17,35 @@ from repro.ops.fsck import _manifest_versions, list_streams
 __all__ = ["inspect_run"]
 
 
+def _inspect_runmanifest(ns: Namespace) -> Optional[Dict]:
+    """Summary of the run's aligned-checkpoint chain (None when the run has
+    no RunManifest — a bare data-plane namespace)."""
+    from repro.run.manifest import RunManifestError, RunManifestStore
+
+    runs = RunManifestStore(ns)
+    seqs = runs.seqs()
+    if not seqs:
+        return None
+    out: Dict = {"entries": len(seqs), "oldest": seqs[0], "latest": seqs[-1]}
+    try:
+        rm = runs.read(seqs[-1])
+        ck = rm.data_checkpoint()
+        out["aligned"] = {
+            "step": rm.step,
+            "model_key": rm.model_key,
+            "topology": list(rm.topology),
+            "data_dp": rm.data_dp,
+            "data_step": rm.aligned_data_step(),
+            "cursor_version": ck.version,
+            "streams": ({name: {"version": v, "step": s}
+                         for name, v, s in ck.streams}
+                        if ck.composite else None),
+        }
+    except ValueError as e:  # RunManifestError or a corrupt bound token:
+        out["error"] = str(e)  # report it — fsck names the exact issue
+    return out
+
+
 def inspect_run(ns: Namespace, recurse_streams: bool = True) -> Dict:
     """Summarize one run namespace from storage alone (no client state)."""
     store = ns.store
@@ -61,6 +90,7 @@ def inspect_run(ns: Namespace, recurse_streams: bool = True) -> Dict:
     trim = read_trim_marker(ns)
     if trim is not None:
         out["trim"] = {"safe_step": trim[0], "safe_version": trim[1]}
+    out["runmanifest"] = _inspect_runmanifest(ns)
     if recurse_streams:
         streams = {name: inspect_run(ns.stream(name), recurse_streams=False)
                    for name in list_streams(ns)}

@@ -1,0 +1,16 @@
+"""``repro.run`` — checkpoint-aligned run lifecycle (RunManifest + TrainSession).
+
+The piece that turns "a data plane plus a training loop" into one
+recoverable training system: a versioned RunManifest atomically binds the
+model checkpoint pointer to the data-plane cursors in a single conditional
+object-store commit, and ``TrainSession`` is the facade training loops use
+to save/resume through it — including elastic (factor DP resize) restores.
+"""
+from repro.run.manifest import (RUN_SCHEMA, RUNMANIFEST_DIR, RunManifest,
+                                RunManifestError, RunManifestStore)
+from repro.run.session import TrainSession
+
+__all__ = [
+    "RUN_SCHEMA", "RUNMANIFEST_DIR", "RunManifest", "RunManifestError",
+    "RunManifestStore", "TrainSession",
+]

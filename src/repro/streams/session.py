@@ -44,12 +44,18 @@ class MultiStreamSession(SessionBase):
                  namespace: str = "runs/dataplane",
                  resume: "Checkpoint | str | None" = None,
                  expected_ranks: Optional[int] = None,
-                 io_pool: Optional[IOPool] = None):
+                 io_pool: Optional[IOPool] = None,
+                 data_topology: Optional[Topology] = None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
         self.store = store
         self.topology = topology
+        # the layout producers materialized (and keep materializing) at; if
+        # not given it is discovered from the streams' manifests on first
+        # reader/writer, so an elastically-resized session keeps the stream
+        # layout uniform and remaps reads instead of rewriting data
+        self._data_topology = data_topology
         self.ns = Namespace(store, namespace)
         self.plan = MixPlan(streams, seed=mix_seed)
         self.mix_seed = mix_seed
@@ -73,6 +79,28 @@ class MultiStreamSession(SessionBase):
     def stream_names(self):
         return self.plan.names
 
+    @property
+    def data_topology(self) -> Topology:
+        """The materialized per-stream D x C layout. Discovered from the
+        first stream manifest that lists a TGB; before any TGB exists (a
+        fresh run) it is the consuming topology."""
+        if self._data_topology is None:
+            for s in self.streams.values():
+                view = s.manifest_view()
+                if view.tgbs:
+                    t = view.tgbs[0]
+                    if (t.dp, t.cp) != (self.topology.dp, self.topology.cp):
+                        gb = self.topology.global_batch
+                        if gb is not None:
+                            gb = gb * t.dp // self.topology.dp
+                        self._data_topology = Topology(
+                            dp=t.dp, cp=t.cp, global_batch=gb,
+                            seq_len=self.topology.seq_len)
+                    break
+            if self._data_topology is None:
+                self._data_topology = self.topology
+        return self._data_topology
+
     def writer(self, writer_id: str = "w0", *, stream: Optional[str] = None,
                policy: Optional[CommitPolicy] = None,
                max_lag: Optional[int] = None,
@@ -82,8 +110,8 @@ class MultiStreamSession(SessionBase):
             raise ValueError(
                 f"multi-stream writer needs stream=<name>; available: "
                 f"{', '.join(self.plan.names)} (got {stream!r})")
-        return TGBWriter(self.streams[stream].ns, self.topology, writer_id,
-                         policy=policy, max_lag=max_lag,
+        return TGBWriter(self.streams[stream].ns, self.data_topology,
+                         writer_id, policy=policy, max_lag=max_lag,
                          pipeline_commits=pipeline_commits,
                          io_pool=self._io_pool)
 
@@ -96,7 +124,8 @@ class MultiStreamSession(SessionBase):
                         self.topology, dp_rank, cp_rank,
                         prefetch_depth=prefetch_depth, dense_read=dense_read,
                         verify_crc=verify_crc, io_pool=self._io_pool,
-                        resume=resume if resume is not None else self._resume)
+                        resume=resume if resume is not None else self._resume,
+                        data_topology=self.data_topology)
         self._readers.append(r)
         return r
 

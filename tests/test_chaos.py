@@ -19,6 +19,7 @@ def test_registry_covers_required_protocol_points():
         "producer_precommit_kill", "producer_post_upload_kill",
         "consumer_midstep_kill", "mixed_reader_midstep_kill",
         "reclaimer_midtrim_kill", "cput_conflict_storm",
+        "trainer_midcheckpoint_kill",
     }
     assert required <= set(SCENARIOS), \
         f"missing scenarios: {required - set(SCENARIOS)}"

@@ -1,0 +1,327 @@
+"""Elastic topology restore (ISSUE 5): factor DP resize through the facade.
+
+The contract under test: resuming a run at 2x or 1/2x the DP degree
+mid-history replays the **byte-identical global batch sequence** of the
+un-resized run (the concatenated per-rank payloads, compared as a flat byte
+stream since batch boundaries rescale with dp), on both single-stream
+sessions and weighted multi-stream mixes; misaligned or unsupported resizes
+fail loudly; and the mq/colocated backends refuse topology-changing restores
+with ``UnsupportedOperation`` instead of silently misreading slices.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MemoryObjectStore, convert_logical_step
+from repro.dataplane import Topology, open_dataplane
+from repro.dataplane.types import Checkpoint, UnsupportedOperation
+from repro.run import TrainSession
+
+NS = "runs/test_elastic"
+
+
+def _fill(session, n, nbytes=192, stream=None):
+    kw = {} if stream is None else {"stream": stream}
+    with session.writer(f"P-{stream or 'single'}", **kw) as w:
+        for _ in range(n):
+            w.write(uniform_slice_bytes=nbytes)
+        w.flush()
+
+
+def _flat(readers, n_steps):
+    """n_steps global batches as one concatenated byte string."""
+    out = []
+    for _ in range(n_steps):
+        batches = [r.next_batch(timeout_s=10) for r in readers]
+        assert len({b.step for b in batches}) == 1
+        out.append(b"".join(b.payload for b in batches))
+    return b"".join(out)
+
+
+# ---------------------------------------------------------------------------
+# convert_logical_step (the core conversion all layers share)
+# ---------------------------------------------------------------------------
+
+def test_convert_logical_step():
+    assert convert_logical_step(6, 2, 4) == 3
+    assert convert_logical_step(6, 2, 1) == 12
+    assert convert_logical_step(0, 2, 4) == 0
+    with pytest.raises(ValueError, match="integer factor"):
+        convert_logical_step(6, 2, 3)
+    with pytest.raises(ValueError, match="boundary"):
+        convert_logical_step(5, 2, 4)  # 10 slices is not a dp=4 boundary
+
+
+# ---------------------------------------------------------------------------
+# Single-stream resize through the facade
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("new_dp", [4, 1])
+def test_single_stream_resize_replays_identical_bytes(new_dp):
+    store = MemoryObjectStore()
+    topo = Topology(dp=2, cp=1)
+    sess = open_dataplane(store, topo, backend="tgb", namespace=NS)
+    _fill(sess, 12)
+    readers = [sess.reader(dp_rank=d) for d in range(2)]
+    _flat(readers, 6)
+    token = readers[0].checkpoint().encode()
+    baseline = _flat(readers, 6)            # un-resized continuation
+
+    resized = open_dataplane(store, Topology(dp=new_dp, cp=1), backend="tgb",
+                             namespace=NS, resume=token)
+    new_readers = [resized.reader(dp_rank=d) for d in range(new_dp)]
+    steps = 6 * 2 // new_dp
+    assert _flat(new_readers, steps) == baseline
+
+
+def test_resize_restore_requires_aligned_step():
+    store = MemoryObjectStore()
+    sess = open_dataplane(store, Topology(dp=2, cp=1), backend="tgb",
+                          namespace=NS)
+    _fill(sess, 8)
+    r = sess.reader()
+    for _ in range(3):
+        r.next_batch(timeout_s=10)
+    token = r.checkpoint()                   # step 3 @ dp=2: 6 slices
+    grown = open_dataplane(store, Topology(dp=4, cp=1), backend="tgb",
+                           namespace=NS)
+    with pytest.raises(UnsupportedOperation, match="factor"):
+        grown.reader().restore(token)        # 6 % 4 != 0: mid-batch
+
+
+def test_resize_restore_rejects_non_integer_factor():
+    store = MemoryObjectStore()
+    sess = open_dataplane(store, Topology(dp=2, cp=1), backend="tgb",
+                          namespace=NS)
+    _fill(sess, 6)
+    r = sess.reader()
+    for _ in range(2):
+        r.next_batch(timeout_s=10)
+    token = r.checkpoint()
+    odd = open_dataplane(store, Topology(dp=3, cp=1), backend="tgb",
+                         namespace=NS)
+    with pytest.raises(UnsupportedOperation, match="integer factor"):
+        odd.reader().restore(token)
+
+
+# ---------------------------------------------------------------------------
+# TrainSession end to end: checkpoint at dp=2, resume at 2x and 1/2x
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("new_dp", [4, 1])
+def test_train_session_elastic_resume(new_dp):
+    store = MemoryObjectStore()
+    topo = Topology(dp=2, cp=1)
+    sess = TrainSession(store, topo, namespace=NS)
+    _fill(sess, 14)
+    readers = [sess.reader(dp_rank=d) for d in range(2)]
+    _flat(readers, 4)
+    sess.checkpoint({"w": np.arange(4, dtype=np.float32)})
+    baseline = _flat(readers, 8)
+
+    resumed = TrainSession.resume(store, NS,
+                                  topology=Topology(dp=new_dp, cp=1))
+    assert resumed.resume_step == convert_logical_step(4, 2, new_dp)
+    state = resumed.restore_model({"w": np.zeros(4, np.float32)})
+    assert np.array_equal(np.asarray(state["w"]),
+                          np.arange(4, dtype=np.float32))
+    new_readers = [resumed.reader(dp_rank=d) for d in range(new_dp)]
+    assert _flat(new_readers, 8 * 2 // new_dp) == baseline
+    # writers vended after the resume keep the ORIGINAL materialized layout
+    _fill(resumed, 2)
+    view = resumed.manifest_view()
+    assert {t.dp for t in view.tgbs} == {2}
+
+
+def test_checkpoint_after_resize_never_overwrites_bound_model():
+    """dp=2 run checkpoints at logical 8 (data step 8); resumed at dp=4 the
+    trainer reaches logical 8 again — a DIFFERENT position (data step 16).
+    The upload must land in a fresh directory, and a crash before the new
+    entry's commit must still restore the dp=2 entry's exact model."""
+    store = MemoryObjectStore()
+    sess = TrainSession(store, Topology(dp=2, cp=1), namespace=NS)
+    _fill(sess, 20)
+    readers = [sess.reader(dp_rank=d) for d in range(2)]
+    _flat(readers, 8)
+    sess.checkpoint({"w": np.float32(8.0)})        # binds data step 8
+
+    resumed = TrainSession.resume(store, NS, topology=Topology(dp=4, cp=1))
+    r4 = [resumed.reader(dp_rank=d) for d in range(4)]
+    _flat(r4, 4)                                   # logical 4 -> 8 @ dp=4
+    from repro.train.checkpoint import upload_model_state
+
+    # the crash window at logical 8 (data 16): upload lands, commit doesn't
+    upload_model_state(resumed.ns, 16, {"w": np.float32(99.0)})
+    again = TrainSession.resume(store, NS)
+    state = again.restore_model({"w": np.float32(0.0)})
+    assert float(np.asarray(state["w"])) == 8.0, \
+        "the bound dp=2 model was clobbered by the resized trainer's upload"
+
+
+def test_fsck_never_orphans_live_resized_upload():
+    """fsck must compare dirs and entries in materialized units: a resized
+    trainer's in-flight upload AHEAD of the last aligned entry is pending,
+    never a safe orphan."""
+    from repro.core import Namespace
+    from repro.ops import fsck
+    from repro.train.checkpoint import upload_model_state
+
+    store = MemoryObjectStore()
+    sess = TrainSession(store, Topology(dp=2, cp=1), namespace=NS)
+    _fill(sess, 16)
+    readers = [sess.reader(dp_rank=d) for d in range(2)]
+    _flat(readers, 10)
+    sess.checkpoint({"w": np.float32(0)})          # aligned @ data step 10
+
+    resumed = TrainSession.resume(store, NS, topology=Topology(dp=4, cp=1))
+    r4 = [resumed.reader(dp_rank=d) for d in range(4)]
+    _flat(r4, 1)                                   # logical 6 = data 12 > 10
+    upload_model_state(resumed.ns, 12, {"w": np.float32(1)})  # mid-commit
+    report = fsck(Namespace(store, NS))
+    kinds = {i.kind for i in report.issues}
+    assert "orphan-model-checkpoint" not in kinds
+    assert "pending-model-checkpoint" in kinds
+
+
+def test_runmanifest_append_refuses_regressive_entry():
+    from repro.dataplane.types import Checkpoint
+    from repro.run import RunManifestError, RunManifestStore
+    from repro.core import Namespace
+
+    store = MemoryObjectStore()
+    runs = RunManifestStore(Namespace(store, NS))
+    new = Checkpoint("tgb", version=3, step=30, topology=(1, 1), data_dp=1)
+    runs.append(step=30, model_key="m30", data_token=new.encode(),
+                topology=(1, 1), data_dp=1)
+    stale = Checkpoint("tgb", version=2, step=20, topology=(1, 1), data_dp=1)
+    with pytest.raises(RunManifestError, match="regressive"):
+        runs.append(step=20, model_key="m20", data_token=stale.encode(),
+                    topology=(1, 1), data_dp=1)
+
+
+def test_elastic_watermarks_trim_in_materialized_units():
+    store = MemoryObjectStore()
+    sess = TrainSession(store, Topology(dp=2, cp=1), namespace=NS)
+    _fill(sess, 12)
+    readers = [sess.reader(dp_rank=d) for d in range(2)]
+    _flat(readers, 6)
+    sess.checkpoint({"w": np.float32(0)})
+
+    resumed = TrainSession.resume(store, NS, topology=Topology(dp=4, cp=1))
+    r4 = [resumed.reader(dp_rank=d) for d in range(4)]
+    _flat(r4, 2)                             # logical steps 3..4 @ dp=4
+    resumed.checkpoint({"w": np.float32(1)})  # aligned @ logical 5 = tgb 10
+    resumed.reclaim()
+    from repro.core import read_trim_marker
+
+    trim = read_trim_marker(resumed.ns)
+    assert trim is not None and trim[0] == 10, trim
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream (MixedReader) resize
+# ---------------------------------------------------------------------------
+
+WEIGHTS = {"web": 0.7, "code": 0.3}
+
+
+def _open_mix(store, dp, resume=None):
+    return open_dataplane(store, Topology(dp=dp, cp=1), backend="tgb",
+                          namespace=NS, streams=WEIGHTS, mix_seed=11,
+                          resume=resume)
+
+
+@pytest.mark.parametrize("new_dp", [4, 1])
+def test_mixed_resize_replays_identical_bytes(new_dp):
+    store = MemoryObjectStore()
+    sess = _open_mix(store, dp=2)
+    for name in WEIGHTS:
+        _fill(sess, 12, stream=name)
+    readers = [sess.reader(dp_rank=d) for d in range(2)]
+    _flat(readers, 6)
+    token = readers[0].checkpoint()
+    assert token.mix_pos == 6 and token.data_dp == 2
+    baseline = _flat(readers, 6)
+
+    resized = _open_mix(store, dp=new_dp, resume=token.encode())
+    new_readers = [resized.reader(dp_rank=d) for d in range(new_dp)]
+    assert _flat(new_readers, 6 * 2 // new_dp) == baseline
+
+
+def test_mixed_resized_checkpoint_round_trips_back():
+    """A composite token captured on a resized mesh restores on the original
+    mesh too (cursors are stored in materialized units)."""
+    store = MemoryObjectStore()
+    sess = _open_mix(store, dp=2)
+    for name in WEIGHTS:
+        _fill(sess, 12, stream=name)
+    r2 = [sess.reader(dp_rank=d) for d in range(2)]
+    _flat(r2, 4)
+    token = r2[0].checkpoint()
+    baseline = _flat(r2, 8)
+
+    grown = _open_mix(store, dp=4, resume=token.encode())
+    g4 = [grown.reader(dp_rank=d) for d in range(4)]
+    _flat(g4, 2)                              # four more materialized steps
+    regrown_token = g4[0].checkpoint()
+    assert regrown_token.mix_pos == 8
+
+    back = _open_mix(store, dp=2, resume=regrown_token.encode())
+    b2 = [back.reader(dp_rank=d) for d in range(2)]
+    assert _flat(b2, 4) == baseline[len(baseline) // 2:]
+
+
+def test_mixed_composite_validation_still_guards_mix_config():
+    store = MemoryObjectStore()
+    sess = _open_mix(store, dp=2)
+    for name in WEIGHTS:
+        _fill(sess, 8, stream=name)
+    r = sess.reader()
+    for _ in range(4):
+        r.next_batch(timeout_s=10)
+    token = r.checkpoint()
+    other = open_dataplane(store, Topology(dp=2, cp=1), backend="tgb",
+                           namespace=NS,
+                           streams={"web": 0.3, "code": 0.7}, mix_seed=11)
+    with pytest.raises(ValueError, match="MixPlan"):
+        other.reader().restore(token)
+
+
+# ---------------------------------------------------------------------------
+# mq / colocated: changed topology is refused, not misread (satellite)
+# ---------------------------------------------------------------------------
+
+def test_mq_restore_refuses_changed_topology():
+    from repro.data.mq import KafkaSimBroker
+
+    broker = KafkaSimBroker()
+    sess = open_dataplane(broker, Topology(dp=2, cp=1), backend="mq")
+    token = sess.reader(dp_rank=0).checkpoint()
+    assert token.topology == (2, 1)
+    resized = open_dataplane(broker, Topology(dp=4, cp=1), backend="mq")
+    with pytest.raises(UnsupportedOperation, match="tgb backend"):
+        resized.reader(dp_rank=0).restore(token)
+    # same topology still restores fine
+    sess.reader(dp_rank=1).restore(token)
+
+
+def test_colocated_restore_refuses_changed_topology():
+    sess = open_dataplane(None, Topology(dp=1, cp=1), backend="colocated")
+    token = sess.reader().checkpoint()
+    assert token.topology == (1, 1)
+    resized = open_dataplane(None, Topology(dp=2, cp=1), backend="colocated")
+    with pytest.raises(UnsupportedOperation, match="tgb backend"):
+        resized.reader().restore(token)
+    sess.close()
+    resized.close()
+
+
+def test_hand_built_tokens_without_topology_restore_positionally():
+    store = MemoryObjectStore()
+    sess = open_dataplane(store, Topology(dp=1, cp=1), backend="tgb",
+                          namespace=NS)
+    _fill(sess, 4)
+    r = sess.reader()
+    first = [r.next_batch(timeout_s=10).payload for _ in range(4)]
+    r2 = sess.reader()
+    r2.restore(Checkpoint("tgb", version=r.checkpoint().version, step=2))
+    assert [r2.next_batch(timeout_s=10).payload for _ in range(2)] == first[2:]
