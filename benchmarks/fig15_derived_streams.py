@@ -1,0 +1,114 @@
+"""Fig. 15 — derived-stream transformation DAG: derive cost and read parity.
+
+Three sub-experiments on the simulated S3-class latency model (model time):
+
+  * ``derive/cold`` — cold derivation throughput: a filter→pack graph
+    streamed over a fresh source, µs of model time per derived TGB
+    (read source slices + transform + content-addressed PUT + commit +
+    derive cursor).
+  * ``derive/resume`` — the exactly-once replay path: all derive cursors are
+    dropped (the worst crash short of losing the output stream) and a
+    restarted worker re-walks the whole source. Every recomputed provenance
+    hash lands on an existing content address, so the replay does zero
+    uploads — the row reports µs per replayed TGB and the store hit rate
+    (must be 100%).
+  * ``read/{raw,derived}`` — per-step slice-read latency through the
+    ordinary consumer path, raw source vs derived output of identical
+    layout. Derived streams are ordinary streams; the two must match.
+
+``us_per_call`` is model-time latency in µs per TGB (derive rows) or per
+step (read rows).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, bench_clock, bench_store
+from repro.core import MeshPosition, Namespace, Producer
+from repro.core.consumer import Consumer
+from repro.data.packing import GlobalBatchPacker
+from repro.dataplane import Topology
+from repro.graph import DeriveCursorStore, DeriveWorker, FilterOp, OpGraph, PackOp
+
+GB, SL, DP = 8, 256, 2
+TOPO = Topology(dp=DP, cp=1, global_batch=GB, seq_len=SL)
+WINDOW = 4
+
+
+def _fill_source(store, n_tgbs: int, ns: str) -> None:
+    packer = GlobalBatchPacker(GB, SL, DP, 1)
+    p = Producer(Namespace(store, ns).stream("raw"), "P", dp=DP, cp=1)
+    p.recover()
+    rng = np.random.default_rng(15)
+    toks = rng.integers(0, 1 << 15, GB * SL * n_tgbs,
+                        dtype=np.int64).astype(np.int32)
+    for b in packer.add_tokens(toks):
+        p.write_tgb(slice_payloads=b.slices, num_samples=b.num_samples,
+                    token_count=b.token_count)
+        p.maybe_commit(force=True)
+    p.finalize()
+
+
+def _graph() -> OpGraph:
+    # keep-all filter: output layout == source layout, so read/{raw,derived}
+    # compare identical byte volumes and the derive cost is pure overhead
+    g = OpGraph("fig15")
+    g.add(FilterOp("all", lambda rows: np.ones(len(rows), bool)),
+          source="raw", output="rows")
+    g.add(PackOp("pack", global_batch=GB, seq_len=SL, dp=DP, cp=1),
+          source="rows", output="derived")
+    return g
+
+
+def _derive_rows(clock, store, ns: str, n_tgbs: int) -> List[Row]:
+    run_ns = Namespace(store, ns)
+    w = DeriveWorker(run_ns, _graph(), TOPO, window_steps=WINDOW)
+    t0 = clock.now()
+    cold = w.run(max_source_steps=n_tgbs, timeout_s=60)
+    cold_dt = clock.now() - t0
+    rows = [Row("fig15/derive/cold", cold_dt * 1e6 / max(1, cold.tgbs_derived),
+                f"tgbs={cold.tgbs_derived} windows={cold.windows} "
+                f"hits={cold.store_hits}")]
+
+    # drop the whole cursor chain: the restarted worker must re-walk the
+    # source, but content addressing turns every PUT into an exists() hit
+    cs = DeriveCursorStore(run_ns.stream("derived"))
+    for seq in cs.seqs():
+        store.delete(cs.key(seq))
+    w2 = DeriveWorker(run_ns, _graph(), TOPO, window_steps=WINDOW)
+    t0 = clock.now()
+    replay = w2.run(max_source_steps=n_tgbs, timeout_s=60)
+    replay_dt = clock.now() - t0
+    hit_rate = replay.store_hits / max(1, replay.tgbs_derived)
+    rows.append(Row("fig15/derive/resume",
+                    replay_dt * 1e6 / max(1, replay.tgbs_derived),
+                    f"hit_rate={hit_rate:.0%} rederived="
+                    f"{replay.tgbs_derived - replay.store_hits}"))
+    return rows
+
+
+def _read_row(clock, store, ns: str, stream: str, n_steps: int) -> Row:
+    cons = Consumer(Namespace(store, ns).stream(stream),
+                    MeshPosition(0, 0, DP, 1))
+    lat = []
+    for _ in range(n_steps):
+        t0 = clock.now()
+        cons.next_batch(timeout_s=60)
+        lat.append(clock.now() - t0)
+    mean = sum(lat) / len(lat)
+    return Row(f"fig15/read/{'raw' if stream == 'raw' else 'derived'}",
+               mean * 1e6, f"steps={n_steps} slice_bytes={GB * SL * 4 // DP}")
+
+
+def run(quick: bool = True) -> List[Row]:
+    clock = bench_clock()
+    store = bench_store(clock)
+    ns = "runs/fig15"
+    n_tgbs = 8 if quick else 24
+    _fill_source(store, n_tgbs, ns)
+    rows = _derive_rows(clock, store, ns, n_tgbs)
+    rows.append(_read_row(clock, store, ns, "raw", n_tgbs))
+    rows.append(_read_row(clock, store, ns, "derived", n_tgbs))
+    return rows

@@ -22,6 +22,7 @@ FIGS = [
     ("fig12", "benchmarks.fig12_io_path"),
     ("fig13", "benchmarks.fig13_failure_isolation"),
     ("fig14", "benchmarks.fig14_aligned_recovery"),
+    ("fig15", "benchmarks.fig15_derived_streams"),
 ]
 
 

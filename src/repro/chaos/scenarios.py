@@ -17,6 +17,8 @@ Protocol points covered:
   flaky_reads                    consumer under 5xx / short / stale reads
   trainer_midcheckpoint_kill     trainer dies between model upload and its
                                  RunManifest commit (aligned recovery)
+  derive_worker_midpublish_kill  derive worker dies between publishing its
+                                 outputs and committing the derive cursor
 """
 from __future__ import annotations
 
@@ -366,6 +368,106 @@ def trainer_midcheckpoint_kill(seed: int = 0) -> ScenarioResult:
     assert clean, "fsck not clean after repair"
     return ScenarioResult(name="trainer_midcheckpoint_kill", passed=True,
                           steps_delivered=n,
+                          recovery_latency_s=recovery_latency,
+                          orphans_detected=orphans, faults_injected=1,
+                          fsck_clean_after=True)
+
+
+def _derive_fixture(store, seed: int):
+    """Deterministic source stream + two-op graph (filter -> pack) under a
+    chaos namespace; returns (ns, graph, source_topology)."""
+    from repro.data.packing import GlobalBatchPacker
+    from repro.graph import FilterOp, OpGraph, PackOp
+
+    gb, sl, dp = 8, 16, 2
+    ns = Namespace(store, CHAOS_PREFIX)
+    packer = GlobalBatchPacker(gb, sl, dp, 1)
+    p = Producer(ns.stream("raw"), "P", dp=dp, cp=1)
+    p.recover()
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 1 << 15, gb * sl * 6, dtype=np.int64).astype(np.int32)
+    for batch in packer.add_tokens(toks):
+        p.write_tgb(slice_payloads=batch.slices,
+                    num_samples=batch.num_samples,
+                    token_count=batch.token_count)
+        p.maybe_commit(force=True)
+    p.finalize()
+    g = OpGraph("chaos-derive")
+    g.add(FilterOp("evens", lambda rows: rows[:, 0] % 2 == 0),
+          source="raw", output="rows")
+    g.add(PackOp("pack", global_batch=4, seq_len=sl, dp=1, cp=1),
+          source="rows", output="filtered")
+    return ns, g, Topology(dp=dp, cp=1, global_batch=gb, seq_len=sl)
+
+
+def _derived_objects(ns: Namespace) -> dict:
+    """{relative tgb key: bytes} of the derived stream (byte-identity probe)."""
+    sns = ns.stream("filtered")
+    prefix = sns.key("tgb") + "/"
+    return {k[len(prefix):]: bytes(sns.store.get(k))
+            for k in sns.store.list(prefix)}
+
+
+@scenario("derive_worker_midpublish_kill")
+def derive_worker_midpublish_kill(seed: int = 0) -> ScenarioResult:
+    """Kill the DeriveWorker *between* publishing a window's outputs (uploads
+    + manifest commit done) and committing the derive cursor — the widest
+    torn-progress window the protocol allows. The restarted worker replays
+    the interrupted window from the previous cursor: every replayed output
+    lands on its content address (upload skipped, counted as a store hit)
+    and its manifest offset deduplicates, so the derived stream ends
+    byte-identical to an uncrashed run with zero duplicates and zero
+    re-derived TGBs persisted, and fsck audits clean."""
+    from repro.core import FaultInjector
+    from repro.graph import DeriveWorker
+
+    n_src = 6
+    # reference: the same derivation with no fault, in a pristine store
+    ref_store = MemoryObjectStore()
+    ref_ns, ref_g, topo = _derive_fixture(ref_store, seed)
+    DeriveWorker(ref_ns, ref_g, topo, window_steps=2).run(
+        max_source_steps=n_src, timeout_s=10)
+    want = _derived_objects(ref_ns)
+
+    store = MemoryObjectStore(faults=FaultInjector())
+    ns, g, topo = _derive_fixture(store, seed)
+    # 2nd derive-cursor conditional put dies before reaching the store:
+    # window 2's outputs are fully published but its progress is not
+    store.faults.crash_on("cput", key_substr=".dc", nth=2, phase="before")
+    w = DeriveWorker(ns, g, topo, window_steps=2)
+    try:
+        w.run(max_source_steps=n_src, timeout_s=10)
+        raise AssertionError("mid-publish crash never fired")
+    except InjectedCrash:
+        pass
+    store.faults = None
+
+    t0 = now()
+    w2 = DeriveWorker(ns, g, topo, window_steps=2)
+    stats = w2.run(max_source_steps=n_src, timeout_s=10)
+    recovery_latency = now() - t0
+    assert stats.resumed_src_step == 2, \
+        f"restart resumed at src_step {stats.resumed_src_step}, expected 2"
+    assert stats.store_hits >= 1, \
+        "replayed window re-uploaded outputs instead of hitting the store"
+
+    got = _derived_objects(ns)
+    assert got == want, \
+        f"derived stream diverged from the uncrashed run: " \
+        f"{sorted(got)} vs {sorted(want)}"
+    view = latest_view(ns.stream("filtered"))
+    offs = [t.producer_seq for t in view.tgbs]
+    assert offs == list(range(len(offs))), \
+        f"derived offsets not contiguous/unique: {offs}"
+    assert len(view.derived_tgbs()) == len(view.tgbs), \
+        "derived TGB lost its provenance record"
+    delivered = len(drain(reader(ns.stream("filtered"), 0, 0, 1, 1),
+                          len(offs)))
+
+    orphans, clean = audit_and_repair(ns)
+    assert clean, "fsck not clean after derive-worker crash recovery"
+    return ScenarioResult(name="derive_worker_midpublish_kill", passed=True,
+                          steps_delivered=delivered,
                           recovery_latency_s=recovery_latency,
                           orphans_detected=orphans, faults_injected=1,
                           fsck_clean_after=True)

@@ -83,6 +83,13 @@ class DatasetView:
         st = self.producers.get(producer_id)
         return st.committed_offset if st is not None else -1
 
+    def derived_tgbs(self) -> List[Tuple[int, TGBDescriptor]]:
+        """(global step, descriptor) for every retained TGB carrying a
+        provenance record — the manifest-level lineage index of a derived
+        stream (empty on raw streams)."""
+        return [(self.base_step + i, t) for i, t in enumerate(self.tgbs)
+                if t.provenance is not None]
+
     def copy(self) -> "DatasetView":
         return DatasetView(self.version, self.base_step, list(self.tgbs),
                            dict(self.producers))

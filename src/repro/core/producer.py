@@ -33,6 +33,7 @@ from repro.core.tgb import TGBBuilder, TGBDescriptor, build_uniform_tgb
 class ProducerStats:
     tgbs_written: int = 0
     bytes_written: int = 0
+    puts_skipped: int = 0  # content-addressed uploads found already in store
     commit_attempts: int = 0
     commit_successes: int = 0
     commit_conflicts: int = 0
@@ -106,15 +107,26 @@ class Producer:
 
     # ------------------------------------------------------------------
     def write_tgb(self, slice_payloads=None, uniform_slice_bytes: Optional[int] = None,
-                  num_samples: int = 0, token_count: int = 0) -> TGBDescriptor:
-        """Stage 1: materialize one TGB object (no coordination)."""
+                  num_samples: int = 0, token_count: int = 0,
+                  provenance: Optional[dict] = None,
+                  content_token: Optional[str] = None) -> TGBDescriptor:
+        """Stage 1: materialize one TGB object (no coordination).
+
+        ``provenance`` (derived streams, see ``repro.graph``) embeds the
+        derivation record in the footer and the descriptor. ``content_token``
+        makes the object key *content-addressed*: the key becomes a pure
+        function of (producer, offset, token), so a replayed derivation lands
+        on the same key — an existence probe then skips the upload entirely
+        (exactly-once derivation as a storage property, not a worker one).
+        """
         offset = self.next_offset
         tgb_id = f"{self.producer_id}-{offset:012d}"
-        token = uuid.uuid4().hex[:8]
+        token = content_token or uuid.uuid4().hex[:8]
         key = self.ns.tgb_key(self.producer_id, offset, token)
         if slice_payloads is not None:
             b = TGBBuilder(tgb_id, self.dp, self.cp, self.producer_id, offset,
-                           num_samples=num_samples, token_count=token_count)
+                           num_samples=num_samples, token_count=token_count,
+                           provenance=provenance)
             for (d, c), payload in slice_payloads.items():
                 b.add_slice(d, c, payload)
             blob = b.build()
@@ -125,13 +137,19 @@ class Producer:
                                      token_count=token_count)
         # TGB objects are immutable and keyed by (producer, offset, token), so
         # retrying the same PUT after a transient 5xx is idempotent — "lost"
-        # writes are simply written again.
-        retry_transient(lambda: self.store.put(key, blob), self.clock)
+        # writes are simply written again. Content-addressed objects are
+        # additionally *deduplicated*: if the key already exists the bytes are
+        # byte-identical by construction, so the upload is skipped.
+        if content_token is not None and \
+                retry_transient(lambda: self.store.exists(key), self.clock):
+            self.stats.puts_skipped += 1
+        else:
+            retry_transient(lambda: self.store.put(key, blob), self.clock)
         desc = TGBDescriptor(
             tgb_id=tgb_id, object_key=key, size_bytes=len(blob),
             dp=self.dp, cp=self.cp, num_samples=num_samples,
             token_count=token_count, producer_id=self.producer_id,
-            producer_seq=offset)
+            producer_seq=offset, provenance=provenance)
         self.pending.append(desc)
         self.next_offset = offset + 1
         self.stats.tgbs_written += 1

@@ -42,7 +42,14 @@ class TGBFormatError(ValueError):
 
 @dataclass(frozen=True)
 class TGBFooter:
-    """Lightweight per-TGB index: one entry per (d, c) slice."""
+    """Lightweight per-TGB index: one entry per (d, c) slice.
+
+    ``provenance`` is the canonical derivation record carried by *derived*
+    TGBs (outputs of an op graph, see ``repro.graph``): a plain wire dict
+    ``{src_stream, src tgb ids, op chain, params hash, graph hash, out
+    index}``. ``None`` on raw (externally produced) TGBs; the wire format
+    omits the key entirely, so pre-provenance footers decode unchanged.
+    """
 
     tgb_id: str
     dp: int
@@ -53,6 +60,7 @@ class TGBFooter:
     token_count: int
     producer_id: str
     producer_seq: int
+    provenance: Optional[dict] = None
 
     def slice_entry(self, d: int, c: int) -> Tuple[int, int, int]:
         if not (0 <= d < self.dp and 0 <= c < self.cp):
@@ -60,7 +68,7 @@ class TGBFooter:
         return self.slices[d * self.cp + c]
 
     def to_bytes(self) -> bytes:
-        return msgpack.packb({
+        doc = {
             "tgb_id": self.tgb_id,
             "dp": self.dp,
             "cp": self.cp,
@@ -69,7 +77,10 @@ class TGBFooter:
             "token_count": self.token_count,
             "producer_id": self.producer_id,
             "producer_seq": self.producer_seq,
-        }, use_bin_type=True)
+        }
+        if self.provenance is not None:
+            doc["provenance"] = self.provenance
+        return msgpack.packb(doc, use_bin_type=True)
 
     @staticmethod
     def from_bytes(raw) -> "TGBFooter":
@@ -81,6 +92,7 @@ class TGBFooter:
             slices=tuple(tuple(s) for s in d["slices"]),
             num_samples=d["num_samples"], token_count=d["token_count"],
             producer_id=d["producer_id"], producer_seq=d["producer_seq"],
+            provenance=d.get("provenance"),
         )
 
 
@@ -88,7 +100,8 @@ class TGBBuilder:
     """Assemble a TGB from per-(d, c) slice payloads."""
 
     def __init__(self, tgb_id: str, dp: int, cp: int, producer_id: str,
-                 producer_seq: int, num_samples: int = 0, token_count: int = 0):
+                 producer_seq: int, num_samples: int = 0, token_count: int = 0,
+                 provenance: Optional[dict] = None):
         self.tgb_id = tgb_id
         self.dp = dp
         self.cp = cp
@@ -96,6 +109,7 @@ class TGBBuilder:
         self.producer_seq = producer_seq
         self.num_samples = num_samples
         self.token_count = token_count
+        self.provenance = provenance
         self._slices: Dict[Tuple[int, int], bytes] = {}
 
     def add_slice(self, d: int, c: int, payload: bytes) -> "TGBBuilder":
@@ -126,6 +140,7 @@ class TGBBuilder:
             tgb_id=self.tgb_id, dp=self.dp, cp=self.cp, slices=tuple(entries),
             num_samples=self.num_samples, token_count=self.token_count,
             producer_id=self.producer_id, producer_seq=self.producer_seq,
+            provenance=self.provenance,
         ).to_bytes()
         parts.append(footer)
         parts.append(_TAIL.pack(len(footer), TGB_MAGIC))
@@ -297,7 +312,14 @@ class TGBReader:
 @dataclass(frozen=True)
 class TGBDescriptor:
     """Manifest entry for one TGB (paper §4.2 'TGB list'). The descriptor's
-    position in the authoritative list defines its global step index."""
+    position in the authoritative list defines its global step index.
+
+    ``provenance`` surfaces a derived TGB's canonical derivation record in
+    the manifest itself (same wire dict as the footer's), so audits and
+    lineage queries never have to open the object. The packed row carries it
+    as an optional trailing element: pre-provenance manifests (9-element
+    rows) unpack unchanged.
+    """
 
     tgb_id: str
     object_key: str
@@ -308,11 +330,15 @@ class TGBDescriptor:
     token_count: int
     producer_id: str
     producer_seq: int  # stream offset within the producer (exactly-once key)
+    provenance: Optional[dict] = None
 
     def pack(self) -> list:
-        return [self.tgb_id, self.object_key, self.size_bytes, self.dp, self.cp,
-                self.num_samples, self.token_count, self.producer_id,
-                self.producer_seq]
+        row = [self.tgb_id, self.object_key, self.size_bytes, self.dp, self.cp,
+               self.num_samples, self.token_count, self.producer_id,
+               self.producer_seq]
+        if self.provenance is not None:
+            row.append(self.provenance)
+        return row
 
     @staticmethod
     def unpack(row: Sequence) -> "TGBDescriptor":

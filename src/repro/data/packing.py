@@ -51,6 +51,11 @@ class GlobalBatchPacker:
     def tokens_per_batch(self) -> int:
         return self.global_batch * self.seq_len
 
+    @property
+    def buffered_tokens(self) -> int:
+        """Tokens currently held back waiting for a full batch."""
+        return self._buffered_tokens
+
     def add_tokens(self, tokens: np.ndarray, samples: int = 1) -> List[PackedBatch]:
         """Feed preprocessed tokens; returns zero or more completed batches."""
         tokens = np.asarray(tokens, dtype=self.dtype).ravel()
@@ -62,7 +67,25 @@ class GlobalBatchPacker:
             out.append(self._emit())
         return out
 
-    def _emit(self) -> PackedBatch:
+    def flush(self, pad_token: int = 0) -> Optional[PackedBatch]:
+        """Emit the final partial batch at end-of-stream, padded to a full
+        grid with ``pad_token``.
+
+        Without this, remainder tokens smaller than ``tokens_per_batch`` are
+        silently stranded in the buffer when the source stream ends. The
+        emitted batch's ``token_count`` is the number of *real* (pre-padding)
+        tokens, so accounting stays honest. Returns ``None`` when the buffer
+        is empty (nothing stranded).
+        """
+        if self._buffered_tokens == 0:
+            return None
+        real = self._buffered_tokens
+        pad = self.tokens_per_batch - real
+        self._buf.append(np.full(pad, pad_token, dtype=self.dtype))
+        self._buffered_tokens += pad
+        return self._emit(real_tokens=real)
+
+    def _emit(self, real_tokens: Optional[int] = None) -> PackedBatch:
         need = self.tokens_per_batch
         chunks, got = [], 0
         while got < need:
@@ -86,7 +109,9 @@ class GlobalBatchPacker:
             for c in range(self.cp):
                 block = grid[d * bs:(d + 1) * bs, c * cs:(c + 1) * cs]
                 slices[(d, c)] = np.ascontiguousarray(block).tobytes()
-        return PackedBatch(slices=slices, num_samples=samples, token_count=need)
+        return PackedBatch(slices=slices, num_samples=samples,
+                           token_count=need if real_tokens is None
+                           else real_tokens)
 
 
 def decode_slice(payload: bytes, batch_per_dp: int, seq_per_cp: int,

@@ -39,6 +39,17 @@ class PackingWriterMixin:
                 offsets.append(off)
         return offsets
 
+    def flush_tokens(self, pad_token: int = 0) -> Optional[int]:
+        """End-of-stream: publish the packer's buffered remainder as one
+        final batch padded with ``pad_token`` (None if nothing is buffered)."""
+        if self._packer is None:
+            return None
+        batch = self._packer.flush(pad_token=pad_token)
+        if batch is None:
+            return None
+        return self.write(batch.slices, num_samples=batch.num_samples,
+                          token_count=batch.token_count)
+
 
 class SessionBase:
     """Default implementations for optional session capabilities."""

@@ -5,9 +5,11 @@ piece of operational truth lives in the object store, so an operator tool
 needs nothing but the namespace):
 
   * ``inspect`` — manifest chain, per-producer durable state, watermarks,
-    trim marker; recurses into streams.
+    trim marker, per-TGB derivation provenance; recurses into streams.
   * ``fsck``    — detect orphaned TGBs, torn commits / torn delta-manifest
-    chains, trim-vs-checkpoint skew. ``--repair`` deletes safe orphans.
+    chains, trim-vs-checkpoint skew, torn derive-cursor chains, and
+    provenance-dangling derived TGBs. ``--repair`` deletes safe orphans
+    (including derived outputs with no committed derive cursor).
   * ``trim``    — run one watermark-driven reclamation cycle (logical trim
     marker + optional physical deletion), exactly what the background
     reclaimer does.
@@ -184,6 +186,21 @@ def _print_inspect(info: dict, out, indent: str = "") -> None:
     if info["trim"]:
         print(f"{indent}  trim marker: safe_step={info['trim']['safe_step']} "
               f"safe_version={info['trim']['safe_version']}", file=out)
+    dv = info.get("derive")
+    if dv:
+        cur = dv.get("cursor")
+        if cur:
+            print(f"{indent}  derive cursor: seq={cur['seq']} "
+                  f"src_step={cur['src_step']} out_seq={cur['out_seq']} "
+                  f"op={cur['op']} graph={cur['graph'][:12]}…", file=out)
+        elif dv.get("cursor_error"):
+            print(f"{indent}  derive cursor: UNREADABLE "
+                  f"({dv['cursor_error']})", file=out)
+        for t in dv.get("derived_tgbs", []):
+            print(f"{indent}  derived step {t['step']} ({t['tgb_id']}): "
+                  f"{t['op']} over {t['src_stream']!r}"
+                  f"[{', '.join(t['src'])}] k={t['out_index']} "
+                  f"params={t['params'][:12]}…", file=out)
     rm = info.get("runmanifest")
     if rm:
         if "error" in rm:

@@ -22,6 +22,13 @@ Checks performed per namespace (and recursively per stream):
     checkpoint watermark (else a restoring rank could find its steps
     reclaimed), the latest view's ``base_step`` must not exceed it either,
     and every watermark's manifest version must still be retained.
+  * **derived streams** — on streams produced by ``repro.graph``: the
+    derive-cursor chain must be contiguous, decodable, non-regressive, and
+    never ahead of the manifest; derived TGBs whose provenance cites source
+    TGBs the source manifest no longer resolves are flagged
+    "provenance-dangling"; derived outputs above the committed cursor are
+    reclassified as safe orphans (a restarted worker regenerates them
+    content-addressed).
   * **RunManifest alignment** — on runs with a RunManifest: the entry chain
     must be contiguous and decodable; the latest entry's model checkpoint
     must exist intact (MANIFEST + every leaf at its recorded size); its data
@@ -458,19 +465,129 @@ def _check_model_orphans(ns: Namespace, entries: Dict[int, object],
                 f"leftover (not touched)"))
 
 
+def _check_derive(ns: Namespace, view: Optional[DatasetView],
+                  report: FsckReport,
+                  parent_ns: Optional[Namespace]) -> None:
+    """Derived-stream audits (streams produced by ``repro.graph``):
+
+      * **derive cursor chain** — contiguous, decodable, non-regressive
+        (src_step and out_seq both monotone), and never ahead of the
+        manifest (a cursor binding outputs the manifest does not commit is
+        a torn derive commit — the worker commits the cursor last).
+      * **provenance-dangling** — a derived TGB whose provenance names
+        source TGB ids the source stream's manifest no longer resolves.
+        Warn severity: a legitimately trimmed source looks the same as a
+        lost one from storage alone, and the derived bytes remain valid.
+      * **orphan reclassification** — uncommitted TGB objects that carry a
+        provenance footer and sit at/above the committed derive cursor's
+        ``out_seq`` were uploaded by a window whose cursor never committed.
+        Unlike a live raw producer's pending set, the restarted worker
+        regenerates them deterministically (content-addressed), so they are
+        *safe* orphans and ``--repair`` deletes them.
+    """
+    from repro.core.tgb import TGBReader
+    from repro.graph.cursor import DeriveCursorError, DeriveCursorStore
+
+    cur_store = DeriveCursorStore(ns)
+    seqs = cur_store.seqs()
+    for prev, cur in zip(seqs, seqs[1:]):
+        if cur != prev + 1:
+            report.issues.append(FsckIssue(
+                "error", "torn-derive-cursor-chain", cur_store.key(prev + 1),
+                f"derive cursor sequence jumps {prev} -> {cur}"))
+    cursors = {}
+    for seq in seqs:
+        try:
+            cursors[seq] = cur_store.read(seq)
+        except DeriveCursorError as e:
+            report.issues.append(FsckIssue(
+                "error", "corrupt-derive-cursor", cur_store.key(seq), str(e)))
+    prev_dc = None
+    for seq in sorted(cursors):
+        dc = cursors[seq]
+        if prev_dc is not None and (dc.src_step < prev_dc.src_step
+                                    or dc.out_seq < prev_dc.out_seq):
+            report.issues.append(FsckIssue(
+                "error", "regressive-derive-cursor", cur_store.key(seq),
+                f"cursor seq {seq} rolls progress back: src_step "
+                f"{prev_dc.src_step} -> {dc.src_step}, out_seq "
+                f"{prev_dc.out_seq} -> {dc.out_seq}"))
+        prev_dc = dc
+    latest = cursors.get(seqs[-1]) if seqs else None
+    if latest is not None and view is not None:
+        committed = max((ps.committed_offset
+                         for ps in view.producers.values()), default=-1)
+        if latest.out_seq > committed + 1:
+            report.issues.append(FsckIssue(
+                "error", "torn-derive-commit", cur_store.key(latest.seq),
+                f"derive cursor binds outputs through out_seq "
+                f"{latest.out_seq} but the manifest commits only through "
+                f"offset {committed} — the cursor must always commit last"))
+    # -- provenance-dangling ---------------------------------------------------
+    if view is not None and parent_ns is not None:
+        src_ids: Dict[str, Optional[set]] = {}
+        for step, t in view.derived_tgbs():
+            src_name = t.provenance.get("src_stream", "")
+            if src_name not in src_ids:
+                sns = parent_ns.stream(src_name)
+                sversions = _manifest_versions(sns)
+                try:
+                    sview = ManifestStore(sns).load_view(sversions[-1]) \
+                        if sversions else None
+                except Exception:
+                    sview = None
+                src_ids[src_name] = ({d.tgb_id for d in sview.tgbs}
+                                     if sview is not None else None)
+            ids = src_ids[src_name]
+            missing = [i for i in t.provenance.get("src", [])
+                       if ids is None or i not in ids]
+            if missing:
+                report.issues.append(FsckIssue(
+                    "warn", "provenance-dangling", t.object_key,
+                    f"derived TGB {t.tgb_id} (step {step}) cites source TGBs "
+                    f"{missing} of stream {src_name!r} that its manifest no "
+                    f"longer resolves (trimmed source, or lost lineage) — "
+                    f"re-derivation from scratch is impossible"))
+    # -- orphan reclassification -----------------------------------------------
+    floor = latest.out_seq if latest is not None else 0
+    for key in list(report.pending):
+        parsed = _parse_tgb_key(ns, key)
+        if parsed is None:
+            continue
+        _pid, offset = parsed
+        try:
+            footer = TGBReader(ns.store, key).footer()
+        except Exception:
+            continue  # unreadable pending object stays pending (not touched)
+        if footer.provenance is None or offset < floor:
+            continue
+        report.pending.remove(key)
+        report.orphans.append(key)
+        report.issues[:] = [i for i in report.issues
+                            if not (i.kind == "pending-tgb" and i.key == key)]
+        report.issues.append(FsckIssue(
+            "warn", "orphan-derived-tgb", key,
+            f"derived output at offset {offset} has no committed derive "
+            f"cursor (committed out_seq={floor}); a restarted worker "
+            f"regenerates it content-addressed (safe to delete)"))
+
+
 def fsck(ns: Namespace, repair: bool = False,
-         recurse_streams: bool = True) -> FsckReport:
+         recurse_streams: bool = True,
+         parent_ns: Optional[Namespace] = None) -> FsckReport:
     """Audit one run namespace through the storage layer alone.
 
     ``repair=True`` deletes the *safely* orphaned objects (superseded
-    duplicate TGBs below their producer's committed offset, and model
-    uploads superseded by a later RunManifest entry) — never pending ones,
-    never manifests. Returns the full :class:`FsckReport`.
+    duplicate TGBs below their producer's committed offset, derived outputs
+    whose window never committed a derive cursor, and model uploads
+    superseded by a later RunManifest entry) — never pending ones, never
+    manifests. Returns the full :class:`FsckReport`.
     """
     report = FsckReport(namespace=ns.prefix)
     versions = _manifest_versions(ns)
     view = _check_chain(ns, versions, report)
     _check_tgbs(ns, view, report)
+    _check_derive(ns, view, report, parent_ns)
     _check_trim_skew(ns, view, versions, report)
     _check_runmanifest(ns, versions, report)
     if repair and report.orphans:
@@ -481,5 +598,5 @@ def fsck(ns: Namespace, repair: bool = False,
     if recurse_streams:
         for name in list_streams(ns):
             report.streams[name] = fsck(ns.stream(name), repair=repair,
-                                        recurse_streams=False)
+                                        recurse_streams=False, parent_ns=ns)
     return report

@@ -2,7 +2,8 @@
 
 Builds a plain-dict summary of a run namespace straight from storage:
 manifest chain shape, per-producer durable state, watermarks, the trim
-marker, and (recursively) every stream of a multi-stream run. The dict is
+marker, derivation state (derive cursors + per-TGB provenance on derived
+streams), and (recursively) every stream of a multi-stream run. The dict is
 stable and JSON-serializable so scripts can consume ``--json`` output.
 """
 from __future__ import annotations
@@ -46,6 +47,38 @@ def _inspect_runmanifest(ns: Namespace) -> Optional[Dict]:
     return out
 
 
+def _inspect_derive(ns: Namespace, view) -> Optional[Dict]:
+    """Derivation summary of one stream (None for raw streams): the derive
+    cursor chain plus every derived TGB's provenance record."""
+    from repro.graph.cursor import DeriveCursorError, DeriveCursorStore
+
+    cur_store = DeriveCursorStore(ns)
+    seqs = cur_store.seqs()
+    derived = view.derived_tgbs() if view is not None else []
+    if not seqs and not derived:
+        return None
+    out: Dict = {"cursors": len(seqs)}
+    if seqs:
+        try:
+            dc = cur_store.read(seqs[-1])
+            out["cursor"] = {"seq": dc.seq, "src_step": dc.src_step,
+                             "out_seq": dc.out_seq, "graph": dc.graph,
+                             "op": dc.op, "worker": dc.worker_id}
+        except DeriveCursorError as e:
+            out["cursor_error"] = str(e)
+    out["derived_tgbs"] = [
+        {"step": step, "tgb_id": t.tgb_id,
+         "src_stream": t.provenance.get("src_stream"),
+         "src": list(t.provenance.get("src", [])),
+         "op": t.provenance.get("op"),
+         "params": t.provenance.get("params"),
+         "graph": t.provenance.get("graph"),
+         "out_index": t.provenance.get("k")}
+        for step, t in derived
+    ]
+    return out
+
+
 def inspect_run(ns: Namespace, recurse_streams: bool = True) -> Dict:
     """Summarize one run namespace from storage alone (no client state)."""
     store = ns.store
@@ -62,6 +95,7 @@ def inspect_run(ns: Namespace, recurse_streams: bool = True) -> Dict:
         "trim": None,
         "tgb_objects": len(store.list(ns.key("tgb"))),
     }
+    view = None
     if versions:
         manifests = ManifestStore(ns)
         doc = manifests.read_doc(versions[-1])
@@ -90,6 +124,9 @@ def inspect_run(ns: Namespace, recurse_streams: bool = True) -> Dict:
     trim = read_trim_marker(ns)
     if trim is not None:
         out["trim"] = {"safe_step": trim[0], "safe_version": trim[1]}
+    derive = _inspect_derive(ns, view)
+    if derive is not None:
+        out["derive"] = derive
     out["runmanifest"] = _inspect_runmanifest(ns)
     if recurse_streams:
         streams = {name: inspect_run(ns.stream(name), recurse_streams=False)

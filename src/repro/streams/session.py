@@ -129,6 +129,20 @@ class MultiStreamSession(SessionBase):
         self._readers.append(r)
         return r
 
+    # -- derived streams -------------------------------------------------------
+    def derive_worker(self, graph, output: Optional[str] = None, *,
+                      worker_id: str = "derive-0", window_steps: int = 4,
+                      verify_crc: bool = True):
+        """A ``DeriveWorker`` executing one chain of ``graph`` under this
+        run's namespace. The graph's source streams are this session's
+        streams (or other derived streams already materialized here); its
+        output becomes an ordinary stream that can be listed in a future
+        session's mix weights and read by any MixedReader."""
+        from repro.graph.worker import DeriveWorker
+        return DeriveWorker(self.ns, graph, self.data_topology, output,
+                            worker_id=worker_id, window_steps=window_steps,
+                            verify_crc=verify_crc, io_pool=self._io_pool)
+
     # -- mix-aware lifecycle ---------------------------------------------------
     def save_watermark(self, rank: int, ckpt: "Checkpoint | str") -> None:
         """Split a composite checkpoint into per-stream mix-aware watermarks."""

@@ -72,5 +72,21 @@ class Stream:
         r.run_cycle()
         return r.stats.tgbs_deleted
 
+    # -- derived streams -------------------------------------------------------
+    def derive_cursors(self):
+        """The derive-cursor store of this stream (non-empty only when the
+        stream is the output of a ``repro.graph`` DeriveWorker)."""
+        from repro.graph.cursor import DeriveCursorStore
+        return DeriveCursorStore(self.ns)
+
+    def latest_derive_cursor(self):
+        """Latest committed DeriveCursor, or None for a raw stream."""
+        return self.derive_cursors().latest()
+
+    @property
+    def is_derived(self) -> bool:
+        """True if any committed TGB of this stream carries provenance."""
+        return bool(self.manifest_view().derived_tgbs())
+
     def __repr__(self) -> str:
         return f"Stream({self.name!r}, weight={self.weight:.3f})"
