@@ -18,14 +18,15 @@ chaos:
 	$(PYTHON) -m repro.chaos
 
 chaos-smoke:
-	$(PYTHON) -m repro.chaos --only producer_precommit_kill,trainer_midcheckpoint_kill,derive_worker_midpublish_kill
+	$(PYTHON) -m repro.chaos --trace chaos-trace.json --only producer_precommit_kill,trainer_midcheckpoint_kill,derive_worker_midpublish_kill,producer_kill_obs_postmortem
 
 bench-full:
 	$(PYTHON) benchmarks/run.py --full
 
 docs-check:
 	$(PYTHON) tools/check_links.py README.md EXPERIMENTS.md \
-		docs/ARCHITECTURE.md docs/OPERATIONS.md
+		docs/ARCHITECTURE.md docs/OPERATIONS.md docs/OBSERVABILITY.md
+	$(PYTHON) tools/check_metrics.py
 
 examples:
 	$(PYTHON) examples/quickstart.py

@@ -8,6 +8,8 @@ Checks (from the fig12 acceptance criteria):
   * parallel steps/s > scalar steps/s for every prefetch depth >= 4
   * read amplification of the coalesced path stays ~1x (< 1.25x; the
     speculative footer over-read is charged to bytes_fetched)
+  * telemetry is near-free: the depth-4 parallel run with tracing + flight
+    recorder enabled keeps >= 95% of the bare run's steps/s
 """
 from __future__ import annotations
 
@@ -65,6 +67,13 @@ def main() -> int:
             failures.append(
                 f"depth{m.group(1)}: parallel {fields['steps_per_s']:.1f} "
                 f"steps/s <= scalar {sc['steps_per_s']:.1f} steps/s")
+    bare = rows.get("fig12/io_path/prefetch/depth4/parallel")
+    obs = rows.get("fig12/io_path/prefetch/depth4/parallel_obs")
+    if bare is not None and obs is not None:
+        if obs["steps_per_s"] < 0.95 * bare["steps_per_s"]:
+            failures.append(
+                f"telemetry overhead: obs-enabled {obs['steps_per_s']:.1f} "
+                f"steps/s < 95% of bare {bare['steps_per_s']:.1f} steps/s")
     if failures:
         print("check_fig12: coalesced/parallel I/O path regressed:",
               file=sys.stderr)

@@ -15,6 +15,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core import (LatencyModel, MemoryObjectStore, Namespace,
                         SystemClock)
+from repro.core.stats import percentile as _shared_percentile
 from repro.data.mq import BrokerConfig, KafkaSimBroker
 
 TIME_SCALE = 1.0  # real time: modeled latencies dominate real CPU overheads
@@ -38,11 +39,7 @@ def bench_broker(clock=None, **kw) -> KafkaSimBroker:
 
 
 def percentile(xs: List[float], p: float) -> float:
-    if not xs:
-        return float("nan")
-    xs = sorted(xs)
-    i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
-    return xs[i]
+    return _shared_percentile(xs, p)
 
 
 @dataclass

@@ -21,6 +21,9 @@ def main(argv=None) -> int:
     ap.add_argument("--list", action="store_true", dest="list_only",
                     help="list scenario names and exit")
     ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="enable span tracing for the run and write a "
+                         "Chrome trace (chrome://tracing / Perfetto) to FILE")
     args = ap.parse_args(argv)
 
     if args.list_only:
@@ -28,11 +31,19 @@ def main(argv=None) -> int:
             print(name)
         return 0
     only = args.only.split(",") if args.only else None
+    if args.trace:
+        from repro.obs.tracer import enable_tracing
+        enable_tracing()
     try:
         results = run_all(only=only, seed=args.seed)
     except KeyError as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
+    if args.trace:
+        from repro.obs.tracer import TRACER
+        TRACER.write_chrome_trace(args.trace)
+        print(f"# chrome trace: {args.trace} ({len(TRACER.spans())} spans)",
+              file=sys.stderr)
     if args.as_json:
         json.dump([vars(r) for r in results], sys.stdout, indent=2)
         print()

@@ -19,6 +19,8 @@ Protocol points covered:
                                  RunManifest commit (aligned recovery)
   derive_worker_midpublish_kill  derive worker dies between publishing its
                                  outputs and committing the derive cursor
+  producer_kill_obs_postmortem   killed producer diagnosed post-mortem from
+                                 its flight-recorder snapshots alone
 """
 from __future__ import annotations
 
@@ -103,6 +105,48 @@ def producer_post_upload_kill(seed: int = 0) -> ScenarioResult:
     ns = fresh_ns()
     _killed_producer_run(ns, "put", "/tgb/", nth=4, phase="after")
     return _recover_and_verify(ns, "producer_post_upload_kill")
+
+
+@scenario("producer_kill_obs_postmortem")
+def producer_kill_obs_postmortem(seed: int = 0) -> ScenarioResult:
+    """Kill a producer mid-run and diagnose it from storage alone: the
+    flight recorder published a snapshot per commit attempt, so ``top``
+    renders the dead incarnation's counters with no process left to ask.
+    Recovery then proceeds exactly like the plain post-upload kill —
+    telemetry must never perturb the data path."""
+    import io
+
+    from repro.obs.recorder import latest_snapshot
+    from repro.ops.obs import component_summary, obs_summary, render_top
+
+    ns = fresh_ns()
+    # 6th TGB upload lands, then the process dies before committing it
+    ns.store.faults.crash_on("put", key_substr="/tgb/", nth=6, phase="after")
+    p = Producer(ns, "P", dp=2, cp=1, obs_snap_interval_s=0.0)
+    comp = p.stats.metric_scope  # registry may suffix across scenarios
+    p.recover()
+    try:
+        produce_range(p, N_TGBS)
+        raise AssertionError("crash rule (put, '/tgb/', nth=6) never fired")
+    except InjectedCrash:
+        pass
+    del p  # the incarnation is gone; only the object store remains
+
+    # post-mortem: storage is the only witness left
+    snap = latest_snapshot(ns, comp)
+    assert snap is not None, "dead producer left no readable snapshot"
+    written = snap["metrics"].get(f"{comp}.tgbs_written", 0)
+    assert written >= 1, f"last snapshot shows no work: {snap['metrics']}"
+    row = component_summary(ns, comp)
+    assert row["family"] == "producer" and row["snaps"] >= 2, row
+    assert "conflict_rate" in row, row
+    summary = obs_summary(ns)
+    assert comp in {r["component"] for r in summary["components"]}
+    buf = io.StringIO()
+    render_top(summary, buf)
+    assert comp in buf.getvalue(), buf.getvalue()
+
+    return _recover_and_verify(ns, "producer_kill_obs_postmortem")
 
 
 @scenario("consumer_midstep_kill")

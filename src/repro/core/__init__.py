@@ -34,7 +34,7 @@ from repro.core.objectstore import (ConditionalPutFailed, DEFAULT_COALESCE_GAP,
                                     MemoryObjectStore, Namespace, NoSuchKey,
                                     ObjectStore, ZERO_LATENCY, coalesce_ranges)
 from repro.core.producer import Producer, ProducerStats, run_producer_loop
-from repro.core.stats import LatencyWindow
+from repro.core.stats import LatencyWindow, percentile, percentiles
 from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TGBBuilder, TGBDescriptor,
                             TGBFooter, TGBReader)
 
@@ -55,7 +55,7 @@ __all__ = [
     "FileObjectStore", "IOPool", "InjectedCrash",
     "LatencyModel", "MemoryObjectStore", "Namespace", "NoSuchKey", "ObjectStore",
     "ZERO_LATENCY", "coalesce_ranges",
-    "LatencyWindow",
+    "LatencyWindow", "percentile", "percentiles",
     "Producer", "ProducerStats", "run_producer_loop",
     "SPECULATIVE_TAIL_BYTES",
     "TGBBuilder", "TGBDescriptor", "TGBFooter", "TGBReader",

@@ -19,6 +19,7 @@ from repro.core.errors import TransientStoreError, retry_transient
 from repro.core.manifest import (DatasetView, ManifestStore, ProducerState)
 from repro.core.objectstore import NoSuchKey
 from repro.core.tgb import TGBDescriptor
+from repro.obs.tracer import trace_span
 
 
 @dataclass
@@ -82,7 +83,8 @@ class CommitProtocol:
         cadence (the paper notes staleness only costs extra failed writes;
         the ALGORITHM reads first)."""
         t0 = self.clock.now()
-        self.refresh()
+        with trace_span("commit.refresh", cat="commit"):
+            self.refresh()
         pending = self._dedup_pending(pending)
         if not pending:
             # nothing to publish; treat as trivially successful with zero I/O
@@ -94,12 +96,16 @@ class CommitProtocol:
             committed_offset=new_offset,
             last_commit_version=self.view.version + 1,
             epoch=self.epoch)
-        version, raw = self.manifests.encode_candidate(
-            self.view, pending, producers, trim_to_step=trim_to_step)
+        with trace_span("commit.encode", cat="commit"):
+            version, raw = self.manifests.encode_candidate(
+                self.view, pending, producers, trim_to_step=trim_to_step)
         try:
-            ok = self.manifests.try_put_version(version, raw)
+            with trace_span("commit.cput", cat="commit", version=version,
+                            bytes=len(raw)):
+                ok = self.manifests.try_put_version(version, raw)
         except TransientStoreError:
-            ok = self._resolve_ambiguous_put(version, new_offset)
+            with trace_span("commit.resolve", cat="commit", version=version):
+                ok = self._resolve_ambiguous_put(version, new_offset)
         tau = self.clock.now() - t0
         if ok:
             # our candidate is now the authoritative state: update local view
@@ -109,8 +115,9 @@ class CommitProtocol:
                                  committed_tgbs=len(pending),
                                  manifest_bytes=len(raw)), [])
         # conflict: rebase onto the winner(s)
-        self.refresh()
-        still = self._dedup_pending(pending)
+        with trace_span("commit.rebase", cat="commit", version=version):
+            self.refresh()
+            still = self._dedup_pending(pending)
         return (CommitResult(False, self.view.version, tau,
                              max(1, len(self.view.producers)),
                              manifest_bytes=len(raw)), still)

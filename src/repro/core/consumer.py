@@ -21,30 +21,41 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.errors import (BatchTimeout, TransientStoreError,
                                retry_transient)
 from repro.core.manifest import DatasetView, ManifestStore
 from repro.core.objectstore import IOPool, Namespace, NoSuchKey
-from repro.core.stats import LatencyWindow
 from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TAIL_BYTES, TGBFooter,
                             TGBFormatError, TGBReader)
+from repro.obs.registry import COUNTER, HISTOGRAM, StatsView
+from repro.obs.tracer import trace_span
 
 
-@dataclass
-class ConsumerStats:
-    steps_consumed: int = 0
-    bytes_consumed: int = 0     # payload actually used by this rank
-    bytes_fetched: int = 0      # payload + footer/header overhead fetched
-    footer_reads: int = 0
-    manifest_polls: int = 0
-    read_retries: int = 0       # transient-fault retries on the data path
-    # bounded: fixed-size tail for percentiles + exact running count/sum
-    read_latencies: LatencyWindow = field(default_factory=LatencyWindow)
-    prefetch_hits: int = 0
-    prefetch_misses: int = 0
+class ConsumerStats(StatsView):
+    """Registry-backed read-path counters (``consumer.<instance>.*``).
+
+    Field semantics are unchanged from the old dataclass; the values now
+    live in the process metrics registry so the flight recorder and the
+    ``batchweave obs`` CLI can see them. ``read_latencies`` is a registry
+    ``Histogram`` — a ``LatencyWindow`` subclass, so iteration/``len``/
+    ``append`` behave exactly as before.
+    """
+
+    _FAMILY = "consumer"
+    _SPEC = {
+        "steps_consumed": COUNTER,
+        "bytes_consumed": COUNTER,   # payload actually used by this rank
+        "bytes_fetched": COUNTER,    # payload + footer/header overhead fetched
+        "footer_reads": COUNTER,
+        "manifest_polls": COUNTER,
+        "read_retries": COUNTER,     # transient-fault retries on the data path
+        "read_latencies": HISTOGRAM,
+        "prefetch_hits": COUNTER,
+        "prefetch_misses": COUNTER,
+    }
 
     @property
     def read_amplification(self) -> float:
@@ -151,7 +162,9 @@ class Consumer:
                  coalesce_reads: bool = True,
                  speculative_tail: int = SPECULATIVE_TAIL_BYTES,
                  min_poll_interval_s: float = 0.02,
-                 read_retries: int = 3):
+                 read_retries: int = 3,
+                 stats_instance: Optional[str] = None,
+                 obs_snap_interval_s: Optional[float] = None):
         self.ns = ns
         self.store = ns.store
         self.clock = self.store.clock
@@ -176,8 +189,16 @@ class Consumer:
         # TransientStoreError / short read / CRC failure propagates
         self.read_retries = read_retries
         self._io_pool = io_pool
-        self.stats = ConsumerStats()
+        self.stats = ConsumerStats(
+            stats_instance or f"d{pos.dp_rank}c{pos.cp_rank}")
         self._stats_lock = threading.Lock()
+        # optional flight recorder: this rank's counters become readable from
+        # storage (lag/throughput diagnosis without touching the process)
+        self._recorder = None
+        if obs_snap_interval_s is not None:
+            from repro.obs.recorder import FlightRecorder
+            self._recorder = FlightRecorder(ns, self.stats.metric_scope,
+                                            interval_s=obs_snap_interval_s)
         self._footers: Dict[str, Tuple[TGBFooter, int]] = {}  # key -> (footer, size)
         self._footer_lock = threading.Lock()
         self.prefetch_depth = prefetch_depth
@@ -279,7 +300,8 @@ class Consumer:
         reader = self._reader(desc.object_key, desc.size_bytes)
         had_footer = reader._footer is not None
         if not had_footer:
-            self._cache_footer(desc.object_key, reader)
+            with trace_span("consumer.footer", cat="read"):
+                self._cache_footer(desc.object_key, reader)
         if self.dense_read:
             blob = reader.read_full()
             with self._stats_lock:
@@ -298,7 +320,8 @@ class Consumer:
         desc = self.view.tgb_at_step(tgb_step)
         reader = self._reader(desc.object_key, desc.size_bytes)
         if reader._footer is None:
-            self._cache_footer(desc.object_key, reader)
+            with trace_span("consumer.footer", cat="read"):
+                self._cache_footer(desc.object_key, reader)
         data = reader.read_slices(d, c, span, verify=self.verify_crc)
         with self._stats_lock:
             self.stats.bytes_fetched += reader.last_fetch_bytes
@@ -309,7 +332,8 @@ class Consumer:
         t0 = self.clock.now()
         tgb_step, d, c = remap_step(self.step, self.pos,
                                     self._tgb_dp(), self._tgb_cp())
-        self._wait_for_step(tgb_step, timeout_s)
+        with trace_span("consumer.wait", cat="read", step=self.step):
+            self._wait_for_step(tgb_step, timeout_s)
         key3 = (tgb_step, d, c)
         with self._prefetch_lock:
             data = self._prefetched.pop(key3, None)
@@ -332,11 +356,14 @@ class Consumer:
             self.stats.prefetch_hits += 1
         else:
             self.stats.prefetch_misses += 1
-            data = self._fetch_and_concat(tgb_step, d, c)
+            with trace_span("consumer.fetch", cat="read", step=self.step):
+                data = self._fetch_and_concat(tgb_step, d, c)
         self.stats.steps_consumed += 1
         self.stats.bytes_consumed += len(data)
         self.stats.read_latencies.append(self.clock.now() - t0)
         self.step += 1
+        if self._recorder is not None:
+            self._recorder.maybe_snap()
         return data
 
     def _tgb_dp(self) -> int:
@@ -439,7 +466,9 @@ class Consumer:
         tgb_step, d, c = key3
         data = None
         try:
-            data = self._fetch_and_concat(tgb_step, d, c)
+            with trace_span("prefetch.fetch", cat="prefetch",
+                            tgb_step=tgb_step):
+                data = self._fetch_and_concat(tgb_step, d, c)
         except (KeyError, NoSuchKey, TransientStoreError, TGBFormatError):
             pass  # not fatal: next_batch will fetch the step directly
         finally:

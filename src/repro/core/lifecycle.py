@@ -23,6 +23,7 @@ import msgpack
 
 from repro.core.manifest import ManifestStore
 from repro.core.objectstore import Namespace, NoSuchKey
+from repro.obs.registry import COUNTER, StatsView
 
 
 @dataclass(frozen=True)
@@ -81,12 +82,17 @@ def global_watermark(ns: Namespace, expected_ranks: Optional[int] = None
                      step=min(w.step for w in wms.values()))
 
 
-@dataclass
-class ReclaimStats:
-    manifests_deleted: int = 0
-    tgbs_deleted: int = 0
-    bytes_reclaimed: int = 0
-    cycles: int = 0
+class ReclaimStats(StatsView):
+    """Registry-backed reclamation counters (``reclaimer.<instance>.*``)."""
+
+    _FAMILY = "reclaimer"
+    _SPEC = {
+        "manifests_deleted": COUNTER,
+        "tgbs_deleted": COUNTER,
+        "bytes_reclaimed": COUNTER,
+        "cycles": COUNTER,
+        "obs_snaps_deleted": COUNTER,  # flight-recorder snapshots pruned
+    }
 
 
 class Reclaimer:
@@ -109,13 +115,17 @@ class Reclaimer:
                  physical_delete: bool = True,
                  manifests: Optional[ManifestStore] = None,
                  watermark_source: Optional[
-                     Callable[[], Optional[Watermark]]] = None):
+                     Callable[[], Optional[Watermark]]] = None,
+                 obs_keep_snaps: int = 8):
         self.ns = ns
         self.store = ns.store
         self.expected_ranks = expected_ranks
         self.physical_delete = physical_delete
         self.watermark_source = watermark_source
         self.manifests = manifests or ManifestStore(ns)
+        # telemetry retention rides the data lifecycle: each cycle keeps the
+        # newest N flight-recorder snapshots per component (0 = keep all)
+        self.obs_keep_snaps = obs_keep_snaps
         self.stats = ReclaimStats()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -146,6 +156,13 @@ class Reclaimer:
             self._write_trim(safe_step, safe_version)  # logical trim signal
         if not self.physical_delete:
             return wg
+        # -- telemetry retention: prune old flight-recorder snapshots ------------
+        if self.obs_keep_snaps > 0:
+            # late import: repro.obs.recorder is reachable from core client
+            # modules that import lifecycle during repro.core initialization
+            from repro.obs.recorder import prune_snaps
+            self.stats.obs_snaps_deleted += prune_snaps(
+                self.ns, keep=self.obs_keep_snaps)
         # -- physical deletion: TGB objects below the safe step ------------------
         latest = self.manifests.latest_version()
         if latest < 0:

@@ -17,7 +17,6 @@ from __future__ import annotations
 import threading
 import uuid
 from concurrent.futures import Future
-from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 from repro.core.commit import CommitProtocol
@@ -27,22 +26,34 @@ from repro.core.lifecycle import read_trim_marker
 from repro.core.manifest import ManifestStore
 from repro.core.objectstore import IOPool, Namespace
 from repro.core.tgb import TGBBuilder, TGBDescriptor, build_uniform_tgb
+from repro.obs.registry import COUNTER, GAUGE, HISTOGRAM, StatsView
+from repro.obs.tracer import trace_span
 
 
-@dataclass
-class ProducerStats:
-    tgbs_written: int = 0
-    bytes_written: int = 0
-    puts_skipped: int = 0  # content-addressed uploads found already in store
-    commit_attempts: int = 0
-    commit_successes: int = 0
-    commit_conflicts: int = 0
-    tgbs_committed: int = 0
-    bytes_committed: int = 0
-    manifest_bytes_written: int = 0
-    tau_sum: float = 0.0
-    gap_samples: List[float] = field(default_factory=list)
-    throttled_time: float = 0.0
+class ProducerStats(StatsView):
+    """Registry-backed producer/commit counters (``producer.<id>.*``).
+
+    Same fields as the old dataclass, now registered in the process metrics
+    registry (and therefore in flight-recorder snapshots). ``gap_samples``
+    — the DAC policy's commit-gap trace — is a bounded registry histogram
+    instead of an unbounded list.
+    """
+
+    _FAMILY = "producer"
+    _SPEC = {
+        "tgbs_written": COUNTER,
+        "bytes_written": COUNTER,
+        "puts_skipped": COUNTER,  # content-addressed uploads already in store
+        "commit_attempts": COUNTER,
+        "commit_successes": COUNTER,
+        "commit_conflicts": COUNTER,
+        "tgbs_committed": COUNTER,
+        "bytes_committed": COUNTER,
+        "manifest_bytes_written": COUNTER,
+        "tau_sum": GAUGE,
+        "gap_samples": HISTOGRAM,
+        "throttled_time": GAUGE,
+    }
 
     @property
     def success_rate(self) -> float:
@@ -59,7 +70,8 @@ class Producer:
                  max_lag: Optional[int] = None,
                  epoch: int = 0,
                  pipeline_commits: bool = False,
-                 io_pool: Optional[IOPool] = None):
+                 io_pool: Optional[IOPool] = None,
+                 obs_snap_interval_s: Optional[float] = None):
         self.ns = ns
         self.store = ns.store
         self.clock = self.store.clock
@@ -70,7 +82,16 @@ class Producer:
         self.manifests = manifests or ManifestStore(ns)
         self.protocol = CommitProtocol(self.manifests, producer_id, epoch=epoch)
         self.max_lag = max_lag
-        self.stats = ProducerStats()
+        self.stats = ProducerStats(producer_id)
+        # optional flight recorder: periodic registry snapshots published to
+        # <ns>/obs/<scope>/ so operators can read this producer's counters
+        # from storage alone (including post-mortem). Never on the data path:
+        # snap errors are swallowed and counted by the recorder itself.
+        self._recorder = None
+        if obs_snap_interval_s is not None:
+            from repro.obs.recorder import FlightRecorder
+            self._recorder = FlightRecorder(ns, self.stats.metric_scope,
+                                            interval_s=obs_snap_interval_s)
         # stream offset of the next TGB this producer will create
         self.next_offset = 0
         # TGBs written to the store but not yet visible in a committed manifest
@@ -123,18 +144,20 @@ class Producer:
         tgb_id = f"{self.producer_id}-{offset:012d}"
         token = content_token or uuid.uuid4().hex[:8]
         key = self.ns.tgb_key(self.producer_id, offset, token)
-        if slice_payloads is not None:
-            b = TGBBuilder(tgb_id, self.dp, self.cp, self.producer_id, offset,
-                           num_samples=num_samples, token_count=token_count,
-                           provenance=provenance)
-            for (d, c), payload in slice_payloads.items():
-                b.add_slice(d, c, payload)
-            blob = b.build()
-        else:
-            blob = build_uniform_tgb(tgb_id, self.dp, self.cp, self.producer_id,
-                                     offset, uniform_slice_bytes or 1024,
-                                     num_samples=num_samples,
-                                     token_count=token_count)
+        with trace_span("producer.build", cat="commit", offset=offset):
+            if slice_payloads is not None:
+                b = TGBBuilder(tgb_id, self.dp, self.cp, self.producer_id,
+                               offset, num_samples=num_samples,
+                               token_count=token_count, provenance=provenance)
+                for (d, c), payload in slice_payloads.items():
+                    b.add_slice(d, c, payload)
+                blob = b.build()
+            else:
+                blob = build_uniform_tgb(tgb_id, self.dp, self.cp,
+                                         self.producer_id, offset,
+                                         uniform_slice_bytes or 1024,
+                                         num_samples=num_samples,
+                                         token_count=token_count)
         # TGB objects are immutable and keyed by (producer, offset, token), so
         # retrying the same PUT after a transient 5xx is idempotent — "lost"
         # writes are simply written again. Content-addressed objects are
@@ -144,7 +167,9 @@ class Producer:
                 retry_transient(lambda: self.store.exists(key), self.clock):
             self.stats.puts_skipped += 1
         else:
-            retry_transient(lambda: self.store.put(key, blob), self.clock)
+            with trace_span("producer.upload", cat="commit", offset=offset,
+                            bytes=len(blob)):
+                retry_transient(lambda: self.store.put(key, blob), self.clock)
         desc = TGBDescriptor(
             tgb_id=tgb_id, object_key=key, size_bytes=len(blob),
             dp=self.dp, cp=self.cp, num_samples=num_samples,
@@ -161,6 +186,8 @@ class Producer:
         """Attempt a commit if the policy's cadence allows. Returns True iff a
         commit attempt completed successfully during this call (in pipelined
         mode a freshly scheduled attempt reports on a later call)."""
+        if self._recorder is not None:
+            self._recorder.maybe_snap()
         if self.pipeline_commits:
             return self._maybe_commit_pipelined(trim_to_step, force)
         return self._commit_sync(self.pending, trim_to_step, force)
@@ -229,6 +256,8 @@ class Producer:
         if self.pending:
             raise RuntimeError(f"{self.producer_id}: finalize failed to drain "
                                f"{len(self.pending)} TGBs")
+        if self._recorder is not None:
+            self._recorder.close()  # last-word snapshot for post-mortems
 
     # ------------------------------------------------------------------
     def lag_exceeded(self) -> bool:

@@ -11,9 +11,39 @@ It iterates like the list it replaces (``sorted(w)``, ``len(w)``,
 from __future__ import annotations
 
 from collections import deque
-from typing import Iterable, Iterator
+from typing import Dict, Iterable, Iterator, Sequence
 
-__all__ = ["LatencyWindow"]
+__all__ = ["LatencyWindow", "percentile", "percentiles"]
+
+
+def percentile(xs: Iterable[float], p: float) -> float:
+    """Nearest-rank percentile (``p`` in [0, 100]) over any sample iterable.
+
+    The single shared implementation for every p50/p95/p99 in the repo —
+    benchmarks, baselines, and registry histograms all call this, so figures
+    stay comparable across backends. NaN on an empty sample set (plots skip
+    it) rather than raising: stats surfaces are read mid-run, often before
+    the first sample lands.
+    """
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
+    return xs[i]
+
+
+def percentiles(xs: Iterable[float],
+                ps: Sequence[float] = (50.0, 95.0, 99.0),
+                ) -> Dict[float, float]:
+    """Several nearest-rank percentiles over one sort of the samples."""
+    xs = sorted(xs)
+    out: Dict[float, float] = {}
+    for p in ps:
+        if not xs:
+            out[p] = float("nan")
+        else:
+            out[p] = xs[min(len(xs) - 1, int(p / 100.0 * len(xs)))]
+    return out
 
 
 class LatencyWindow:

@@ -24,7 +24,9 @@ from queue import Empty, Full, Queue
 from typing import Callable, List, Optional
 
 from repro.core.clock import Clock, SystemClock
+from repro.core.consumer import ConsumerStats
 from repro.core.errors import BatchTimeout
+from repro.core.stats import percentile as _percentile
 
 
 @dataclass
@@ -42,11 +44,7 @@ class StepTrace:
     stalls: int = 0
 
     def percentile(self, p: float) -> float:
-        if not self.latencies:
-            return float("nan")
-        xs = sorted(self.latencies)
-        i = min(len(xs) - 1, int(p / 100.0 * len(xs)))
-        return xs[i]
+        return _percentile(self.latencies, p)
 
 
 class ColocatedPipeline:
@@ -69,6 +67,11 @@ class ColocatedPipeline:
         self._idx_lock = threading.Lock()
         self.crashed = threading.Event()
         self._partial: List[int] = []  # items drawn for a not-yet-complete batch
+        # the same registry-backed surface the tgb consumer exposes, so
+        # fig5/fig10 baseline comparisons report identical fields; byte
+        # counters use the facade's int32-index payload convention, and
+        # fetched == consumed (in-process queue: no transport amplification)
+        self.stats = ConsumerStats("colocated")
 
     # -- contention model -------------------------------------------------------
     def _slowdown(self) -> float:
@@ -137,6 +140,11 @@ class ColocatedPipeline:
             except Empty:
                 continue
         items, self._partial = self._partial, []
+        nbytes = 4 * len(items)  # int32 sample indices
+        self.stats.steps_consumed += 1
+        self.stats.bytes_fetched += nbytes
+        self.stats.bytes_consumed += nbytes
+        self.stats.read_latencies.append(self.clock.now() - t0)
         return items
 
     def run_training(self, steps: int, gpu_step_s: float,

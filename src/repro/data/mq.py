@@ -23,8 +23,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.clock import Clock, SystemClock
+from repro.core.consumer import ConsumerStats
 from repro.core.errors import BatchTimeout
-from repro.core.stats import LatencyWindow
+from repro.obs.registry import COUNTER, StatsView
 
 
 class MessageTooLarge(Exception):
@@ -46,14 +47,31 @@ class BrokerConfig:
     request_timeout_s: float = 30.0
 
 
-@dataclass
-class BrokerStats:
-    appends: int = 0
-    append_failures_size: int = 0
-    append_failures_timeout: int = 0
-    bytes_in: int = 0
-    fetches: int = 0
-    bytes_out: int = 0
+class BrokerStats(StatsView):
+    """Registry-backed broker counters (``broker.<instance>.*``)."""
+
+    _FAMILY = "broker"
+    _SPEC = {
+        "appends": COUNTER,
+        "append_failures_size": COUNTER,
+        "append_failures_timeout": COUNTER,
+        "bytes_in": COUNTER,
+        "fetches": COUNTER,
+        "bytes_out": COUNTER,
+    }
+
+
+class MQProducerStats(StatsView):
+    """Registry-backed strict-TGB publisher counters, normalized to the tgb
+    backend's producer field names (``producer.<instance>.*``) so fig5/fig6
+    baseline comparisons report the same schema."""
+
+    _FAMILY = "producer"
+    _SPEC = {
+        "tgbs_written": COUNTER,
+        "bytes_written": COUNTER,
+        "send_failures": COUNTER,  # broker rejections (size/timeout)
+    }
 
 
 class KafkaSimBroker:
@@ -147,21 +165,32 @@ class KafkaSimBroker:
 class KafkaTGBProducer:
     """Strict-TGB producer: one message carries exactly one complete TGB."""
 
-    def __init__(self, broker: KafkaSimBroker):
+    def __init__(self, broker: KafkaSimBroker, instance: str = "mq"):
         self.broker = broker
-        self.sent = 0
-        self.failed = 0
-        self.bytes_sent = 0
+        self.stats = MQProducerStats(instance)
 
     def publish_tgb(self, tgb_blob: bytes) -> Optional[int]:
         try:
             off = self.broker.append(tgb_blob)
         except (MessageTooLarge, RequestTimeout):
-            self.failed += 1
+            self.stats.send_failures += 1
             return None
-        self.sent += 1
-        self.bytes_sent += len(tgb_blob)
+        self.stats.tgbs_written += 1
+        self.stats.bytes_written += len(tgb_blob)
         return off
+
+    # -- legacy attribute aliases (pre-registry callers) --------------------
+    @property
+    def sent(self) -> int:
+        return self.stats.tgbs_written
+
+    @property
+    def failed(self) -> int:
+        return self.stats.send_failures
+
+    @property
+    def bytes_sent(self) -> int:
+        return self.stats.bytes_written
 
 
 class KafkaTGBConsumer:
@@ -172,10 +201,10 @@ class KafkaTGBConsumer:
         self.broker = broker
         self.d, self.c, self.dp, self.cp = d, c, dp, cp
         self.offset = 0
-        self.bytes_fetched = 0
-        self.bytes_consumed = 0
-        # bounded: fixed-size tail for percentiles + exact running count/sum
-        self.read_latencies = LatencyWindow()
+        # the same registry-backed surface the tgb consumer exposes, so
+        # fig5/fig10 baseline comparisons report identical fields
+        # (steps_consumed, bytes_fetched, read_retries, read_latencies, ...)
+        self.stats = ConsumerStats(f"mq-d{d}c{c}")
 
     def next_batch(self, timeout_s: Optional[float] = None) -> bytes:
         """Blocking read of this rank's slice for the next offset.
@@ -192,15 +221,31 @@ class KafkaTGBConsumer:
             raise BatchTimeout(
                 f"offset {self.offset} not published after {timeout_s}s") from e
         self.offset += 1
-        self.bytes_fetched += len(msg)
+        self.stats.bytes_fetched += len(msg)
         footer_len, _magic = _TAIL.unpack(msg[-TAIL_BYTES:])
+        # whole-message fetch = one footer parse per message, no range reads
+        self.stats.footer_reads += 1
         footer = TGBFooter.from_bytes(msg[-TAIL_BYTES - footer_len:-TAIL_BYTES])
         off, length, _crc = footer.slice_entry(self.d, self.c)
         out = msg[off:off + length]
-        self.bytes_consumed += len(out)
-        self.read_latencies.append(self.broker.clock.now() - t0)
+        self.stats.steps_consumed += 1
+        self.stats.bytes_consumed += len(out)
+        self.stats.read_latencies.append(self.broker.clock.now() - t0)
         return out
+
+    # -- legacy attribute aliases (pre-registry callers) --------------------
+    @property
+    def bytes_fetched(self) -> int:
+        return self.stats.bytes_fetched
+
+    @property
+    def bytes_consumed(self) -> int:
+        return self.stats.bytes_consumed
+
+    @property
+    def read_latencies(self):
+        return self.stats.read_latencies
 
     @property
     def read_amplification(self) -> float:
-        return self.bytes_fetched / max(1, self.bytes_consumed)
+        return self.stats.read_amplification

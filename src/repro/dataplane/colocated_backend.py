@@ -104,6 +104,10 @@ class ColocatedBatchReader:
     def close(self) -> None:
         pass
 
+    @property
+    def stats(self):
+        return self.pipeline.stats
+
 
 class ColocatedSession(SessionBase):
     backend = "colocated"

@@ -38,7 +38,7 @@ class MQWriter(PackingWriterMixin):
         self.broker = broker
         self.topology = topology
         self.writer_id = writer_id
-        self.kp = KafkaTGBProducer(broker)
+        self.kp = KafkaTGBProducer(broker, instance=writer_id)
         self.next_seq = 0
         self.recovered_offset = 0
 
@@ -85,7 +85,7 @@ class MQWriter(PackingWriterMixin):
 
     @property
     def stats(self):
-        return self.kp
+        return self.kp.stats
 
 
 class MQBatchReader:
@@ -137,7 +137,7 @@ class MQBatchReader:
 
     @property
     def stats(self):
-        return self.consumer
+        return self.consumer.stats
 
 
 class MQSession(SessionBase):

@@ -36,14 +36,16 @@ class TGBWriter(PackingWriterMixin):
                  policy: Optional[CommitPolicy] = None,
                  max_lag: Optional[int] = None,
                  pipeline_commits: bool = False,
-                 io_pool: Optional[IOPool] = None):
+                 io_pool: Optional[IOPool] = None,
+                 obs_snap_interval_s: Optional[float] = None):
         self.topology = topology
         self.writer_id = writer_id
         self.producer = Producer(ns, writer_id, dp=topology.dp, cp=topology.cp,
                                  policy=policy, manifests=ManifestStore(ns),
                                  max_lag=max_lag,
                                  pipeline_commits=pipeline_commits,
-                                 io_pool=io_pool)
+                                 io_pool=io_pool,
+                                 obs_snap_interval_s=obs_snap_interval_s)
         self.recovered_offset = 0
 
     # -- lifecycle -----------------------------------------------------------
@@ -91,12 +93,16 @@ class TGBBatchReader:
                  cp_rank: int, prefetch_depth: int = 4,
                  dense_read: bool = False, verify_crc: bool = True,
                  io_pool: Optional[IOPool] = None,
-                 resume: "Checkpoint | str | None" = None):
+                 resume: "Checkpoint | str | None" = None,
+                 stats_instance: Optional[str] = None,
+                 obs_snap_interval_s: Optional[float] = None):
         self.topology = topology
         self.consumer = Consumer(
             ns, MeshPosition(dp_rank, cp_rank, topology.dp, topology.cp),
             prefetch_depth=prefetch_depth, dense_read=dense_read,
-            verify_crc=verify_crc, io_pool=io_pool)
+            verify_crc=verify_crc, io_pool=io_pool,
+            stats_instance=stats_instance,
+            obs_snap_interval_s=obs_snap_interval_s)
         self.dp_rank, self.cp_rank = dp_rank, cp_rank
         ckpt = Checkpoint.coerce(resume)
         if ckpt is not None:
@@ -190,7 +196,8 @@ class TGBSession(SessionBase):
                  resume: "Checkpoint | str | None" = None,
                  expected_ranks: Optional[int] = None,
                  io_pool: Optional[IOPool] = None,
-                 data_topology: Optional[Topology] = None):
+                 data_topology: Optional[Topology] = None,
+                 obs_snap_interval_s: Optional[float] = None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
@@ -208,6 +215,9 @@ class TGBSession(SessionBase):
         self._expected_ranks = expected_ranks or topology.world
         self._reclaimer: Optional[Reclaimer] = None
         self._readers: List[TGBBatchReader] = []
+        # flight-recorder cadence for every client this session vends
+        # (None = telemetry snapshots off; the counters still register)
+        self._obs_snap_interval_s = obs_snap_interval_s
 
     # -- clients -------------------------------------------------------------
     def writer(self, writer_id: str = "w0", *,
@@ -216,7 +226,8 @@ class TGBSession(SessionBase):
                pipeline_commits: bool = False) -> TGBWriter:
         return TGBWriter(self.ns, self.data_topology, writer_id, policy=policy,
                          max_lag=max_lag, pipeline_commits=pipeline_commits,
-                         io_pool=self._io_pool)
+                         io_pool=self._io_pool,
+                         obs_snap_interval_s=self._obs_snap_interval_s)
 
     def reader(self, dp_rank: int = 0, cp_rank: int = 0, *,
                prefetch_depth: int = 4, dense_read: bool = False,
@@ -227,7 +238,8 @@ class TGBSession(SessionBase):
                            dense_read=dense_read, verify_crc=verify_crc,
                            io_pool=self._io_pool,
                            resume=resume if resume is not None
-                           else self._resume)
+                           else self._resume,
+                           obs_snap_interval_s=self._obs_snap_interval_s)
         self._readers.append(r)
         return r
 

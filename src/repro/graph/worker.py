@@ -30,7 +30,6 @@ append-only, duplicate-free, and deterministic.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -43,20 +42,26 @@ from repro.dataplane.types import Topology
 from repro.graph.cursor import DeriveCursorError, DeriveCursorStore
 from repro.graph.graph import DeriveChain, GraphError, OpGraph
 from repro.graph.provenance import Provenance
+from repro.obs.registry import COUNTER, GAUGE, StatsView
+from repro.obs.tracer import trace_span
 
 __all__ = ["DeriveStats", "DeriveWorker"]
 
 
-@dataclass
-class DeriveStats:
-    source_steps: int = 0       # source TGBs consumed (this incarnation)
-    rows_in: int = 0            # source rows fed to the chain
-    rows_out: int = 0           # rows surviving into packed outputs
-    tgbs_derived: int = 0       # output TGBs published (incl. store hits)
-    store_hits: int = 0         # outputs whose upload was skipped (replay)
-    windows: int = 0            # derive quanta completed
-    cursor_commits: int = 0
-    resumed_src_step: int = 0   # where recover() placed the source cursor
+class DeriveStats(StatsView):
+    """Registry-backed derivation counters (``derive.<worker_id>.*``)."""
+
+    _FAMILY = "derive"
+    _SPEC = {
+        "source_steps": COUNTER,    # source TGBs consumed (this incarnation)
+        "rows_in": COUNTER,         # source rows fed to the chain
+        "rows_out": COUNTER,        # rows surviving into packed outputs
+        "tgbs_derived": COUNTER,    # output TGBs published (incl. store hits)
+        "store_hits": COUNTER,      # uploads skipped via content address
+        "windows": COUNTER,         # derive quanta completed
+        "cursor_commits": COUNTER,
+        "resumed_src_step": GAUGE,  # where recover() placed the source cursor
+    }
 
 
 class DeriveWorker:
@@ -68,7 +73,8 @@ class DeriveWorker:
                  worker_id: str = "derive-0",
                  window_steps: int = 4,
                  verify_crc: bool = True,
-                 io_pool: Optional[IOPool] = None):
+                 io_pool: Optional[IOPool] = None,
+                 obs_snap_interval_s: Optional[float] = None):
         if not source_topology.decodable:
             raise ValueError(
                 "DeriveWorker needs Topology(global_batch=..., seq_len=...) "
@@ -98,10 +104,18 @@ class DeriveWorker:
         # source TGB as src_dp consecutive logical payloads in d-major order,
         # so whole global batches flow through the ordinary read path
         self.consumer = Consumer(self.src_ns, MeshPosition(0, 0, 1, 1),
-                                 verify_crc=verify_crc, io_pool=io_pool)
+                                 verify_crc=verify_crc, io_pool=io_pool,
+                                 stats_instance=f"{worker_id}-src")
         self.src_step = 0  # next source TGB index to consume
-        self.stats = DeriveStats()
+        self.stats = DeriveStats(worker_id)
         self._graph_hash = graph.graph_hash()
+        # optional flight recorder into the run root: windows/store-hit/cursor
+        # counters become readable from storage for live and post-mortem ops
+        self._recorder = None
+        if obs_snap_interval_s is not None:
+            from repro.obs.recorder import FlightRecorder
+            self._recorder = FlightRecorder(ns, self.stats.metric_scope,
+                                            interval_s=obs_snap_interval_s)
 
     # -- recovery -------------------------------------------------------------
     def recover(self) -> int:
@@ -175,6 +189,15 @@ class DeriveWorker:
         hazard — replays start after it. Returns False if no source step was
         available at all (no cursor is written).
         """
+        with trace_span("derive.window", cat="derive", start=self.src_step,
+                        end=end_step):
+            done = self._derive_window_inner(end_step, timeout_s)
+        if self._recorder is not None:
+            self._recorder.maybe_snap()  # window boundary = natural heartbeat
+        return done
+
+    def _derive_window_inner(self, end_step: int,
+                             timeout_s: Optional[float]) -> bool:
         start = self.src_step
         for op in self.chain.ops:
             op.reset()
@@ -246,4 +269,6 @@ class DeriveWorker:
                 target = min(target, max_source_steps)
             if not self.derive_window(target, timeout_s=timeout_s):
                 break
+        if self._recorder is not None:
+            self._recorder.close()  # last-word snapshot for post-mortems
         return self.stats

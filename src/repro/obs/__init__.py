@@ -1,0 +1,35 @@
+"""Storage-native observability: metrics registry, span tracer, flight recorder.
+
+Three layers, each usable alone:
+
+  * ``registry``  — process-wide ``MetricsRegistry``; every stat surface in
+    the repo (producer, consumer, derive worker, reclaimer, serve engine,
+    the mq/colocated baselines) is a ``StatsView`` registered under a stable
+    dotted name.
+  * ``tracer``    — bounded-ring span tracer (``TRACER``), off by default,
+    exporting Chrome-trace JSON (Perfetto) and a stall-attribution report.
+  * ``recorder``  — ``FlightRecorder`` publishing per-component registry
+    snapshots to ``<run>/obs/<component>/<seq>.snap`` via put-if-absent
+    chains, so ``batchweave obs``/``top`` render run health from storage
+    alone — including post-mortem.
+
+See docs/OBSERVABILITY.md for the metric catalog, span taxonomy, and
+snapshot schema.
+"""
+from repro.obs.recorder import (FlightRecorder, OBS_DIR, SNAP_SCHEMA,
+                                component_dirs, latest_snapshot, list_snaps,
+                                prune_snaps, read_snapshots)
+from repro.obs.registry import (Counter, Gauge, Histogram, Metric,
+                                MetricsRegistry, StatsView, default_registry,
+                                set_default_registry)
+from repro.obs.tracer import (TRACER, Span, Tracer, disable_tracing,
+                              enable_tracing, trace_span)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Metric", "MetricsRegistry", "StatsView",
+    "default_registry", "set_default_registry",
+    "Span", "TRACER", "Tracer", "disable_tracing", "enable_tracing",
+    "trace_span",
+    "FlightRecorder", "OBS_DIR", "SNAP_SCHEMA", "component_dirs",
+    "latest_snapshot", "list_snaps", "prune_snaps", "read_snapshots",
+]

@@ -13,6 +13,11 @@ needs nothing but the namespace):
   * ``trim``    — run one watermark-driven reclamation cycle (logical trim
     marker + optional physical deletion), exactly what the background
     reclaimer does.
+  * ``obs``     — dump every component's latest flight-recorder snapshot
+    (full metric catalog + same-incarnation rates).
+  * ``top``     — one row per component: throughput, steps/s, ingestion
+    lag, commit-conflict rate — rendered purely from storage snapshots,
+    so it works on live runs and post-mortem alike.
 
 Exit codes: 0 = ok/clean, 1 = fsck found problems, 2 = usage error.
 """
@@ -58,6 +63,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "many watermarks exist)")
     tr.add_argument("--logical-only", action="store_true",
                     help="only advance the trim marker; no deletion")
+
+    sub.add_parser("obs", help="dump flight-recorder snapshots (full metric "
+                               "catalog per component)")
+    sub.add_parser("top", help="per-component throughput / lag / conflict "
+                               "table from storage snapshots")
     return ap
 
 
@@ -156,6 +166,17 @@ def main(argv: Optional[List[str]] = None, store: Optional[ObjectStore] = None,
         return 0 if report.clean and not repaired else 1
     if args.cmd == "trim":
         _run_trim(ns, args.ranks, args.logical_only, args.as_json, out)
+        return 0
+    if args.cmd in ("obs", "top"):
+        from repro.ops.obs import obs_summary, render_obs, render_top
+        summary = obs_summary(ns)
+        if args.as_json:
+            json.dump(summary, out, indent=2)
+            out.write("\n")
+        elif args.cmd == "top":
+            render_top(summary, out)
+        else:
+            render_obs(summary, out)
         return 0
     return 2  # unreachable: argparse enforces the subcommand
 

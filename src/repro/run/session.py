@@ -45,10 +45,23 @@ from repro.core.lifecycle import Reclaimer
 from repro.core.objectstore import Namespace, NoSuchKey, ObjectStore
 from repro.dataplane import open_dataplane
 from repro.dataplane.types import Checkpoint, Topology, UnsupportedOperation
+from repro.obs.registry import COUNTER, GAUGE, StatsView
+from repro.obs.tracer import trace_span
 from repro.run.manifest import RunManifest, RunManifestStore
 from repro.train.checkpoint import load_model_state, upload_model_state
 
-__all__ = ["TrainSession"]
+__all__ = ["TrainSession", "TrainStats"]
+
+
+class TrainStats(StatsView):
+    """Registry-backed run-level counters (``train.<run>.*``)."""
+
+    _FAMILY = "train"
+    _SPEC = {
+        "checkpoints": COUNTER,        # committed RunManifest entries
+        "last_checkpoint_step": GAUGE,  # logical step the last entry bound
+        "reclaim_cycles": COUNTER,
+    }
 
 
 class TrainSession:
@@ -102,6 +115,7 @@ class TrainSession:
         self._readers: List[object] = []
         self._reclaimers: Dict[Optional[str], Reclaimer] = {}
         self._cycle_entry: Optional[RunManifest] = None  # set per reclaim()
+        self.stats = TrainStats(namespace.rsplit("/", 1)[-1] or "run")
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -187,15 +201,20 @@ class TrainSession:
                 break
             attempt += 1
             tag = f"r{attempt}"
-        model_key = upload_model_state(self.ns, data_step, state,
-                                       cursor=(data_ck.version, data_ck.step),
-                                       tag=tag)
-        entry = self.runs.append(
-            step=step, model_key=model_key, data_token=data_ck.encode(),
-            topology=(self.topology.dp, self.topology.cp), data_dp=data_dp,
-            global_batch=self.topology.global_batch,
-            seq_len=self.topology.seq_len,
-            streams=self.streams_config, mix_seed=self.mix_seed)
+        with trace_span("checkpoint.upload", cat="checkpoint", step=step):
+            model_key = upload_model_state(
+                self.ns, data_step, state,
+                cursor=(data_ck.version, data_ck.step), tag=tag)
+        with trace_span("checkpoint.commit", cat="checkpoint", step=step):
+            entry = self.runs.append(
+                step=step, model_key=model_key, data_token=data_ck.encode(),
+                topology=(self.topology.dp, self.topology.cp),
+                data_dp=data_dp,
+                global_batch=self.topology.global_batch,
+                seq_len=self.topology.seq_len,
+                streams=self.streams_config, mix_seed=self.mix_seed)
+        self.stats.checkpoints += 1
+        self.stats.last_checkpoint_step = step
         for r, ck in zip(self._readers, cks):
             # watermark identity is the mesh position, not discovery order —
             # a subset of ranks must never shadow another rank's file
@@ -241,6 +260,7 @@ class TrainSession:
         far across the run."""
         # one RunManifest read serves every stream's cycle this round
         self._cycle_entry = self.runs.latest()
+        self.stats.reclaim_cycles += 1
         try:
             if self.streams_config:
                 total = 0

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.models import (ModelConfig, decode_step, init_decode_state,
                           prefill)
+from repro.obs.registry import COUNTER, GAUGE, StatsView
 
 
 @dataclass
@@ -32,13 +33,17 @@ class Request:
     done: bool = False
 
 
-@dataclass
-class EngineStats:
-    prefills: int = 0
-    decode_steps: int = 0
-    tokens_out: int = 0
-    wall_prefill_s: float = 0.0
-    wall_decode_s: float = 0.0
+class EngineStats(StatsView):
+    """Registry-backed serving counters (``serve.<instance>.*``)."""
+
+    _FAMILY = "serve"
+    _SPEC = {
+        "prefills": COUNTER,
+        "decode_steps": COUNTER,
+        "tokens_out": COUNTER,
+        "wall_prefill_s": GAUGE,
+        "wall_decode_s": GAUGE,
+    }
 
     @property
     def tokens_per_s(self) -> float:

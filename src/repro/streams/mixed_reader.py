@@ -76,7 +76,11 @@ class MixedReader:
                                  prefetch_depth=prefetch_depth,
                                  dense_read=dense_read,
                                  verify_crc=verify_crc,
-                                 io_pool=self.io_pool)
+                                 io_pool=self.io_pool,
+                                 # stream-qualified registry instance so N
+                                 # streams of one rank never collide into
+                                 # auto-suffixed scopes
+                                 stats_instance=f"{name}-d{dp_rank}c{cp_rank}")
             for name in plan.names
         }
         self.global_step = 0  # next mixed step this reader will return

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Lint: every registered metric must be documented in docs/OBSERVABILITY.md.
+
+Walks every ``StatsView`` subclass in the tree, registers its spec against a
+fresh ``MetricsRegistry`` (so a broken spec fails here, not at first use in
+production), and asserts each resulting ``<family>.<field>`` name appears in
+the observability catalog. A metric an operator cannot look up is a metric
+that will be misread during an incident.
+
+Modules with heavyweight optional deps (the serve engine imports jax) are
+skipped with a warning when the dep is missing — the doc check must run on
+any checkout.
+
+Usage: PYTHONPATH=src python tools/check_metrics.py [docs/OBSERVABILITY.md]
+Exit code 1 if any metric is undocumented.
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+from pathlib import Path
+
+#: every module that defines a StatsView subclass (keep in sync when adding
+#: a new stats surface — the test in test_obs/test_docs does not know to
+#: look in modules not listed here)
+STATS_MODULES = [
+    "repro.core.producer",
+    "repro.core.consumer",
+    "repro.core.lifecycle",
+    "repro.run.session",
+    "repro.graph.worker",
+    "repro.data.mq",
+    "repro.serve.engine",
+]
+
+
+def collect_metric_names() -> "tuple[list[str], list[str]]":
+    """(sorted metric names ``family.field``, skipped-module warnings)."""
+    from repro.obs.registry import MetricsRegistry, StatsView
+
+    names, warnings = set(), []
+    for modname in STATS_MODULES:
+        try:
+            mod = importlib.import_module(modname)
+        except ImportError as e:
+            warnings.append(f"skipped {modname} (missing dep: {e})")
+            continue
+        for attr in dir(mod):
+            obj = getattr(mod, attr)
+            if not (isinstance(obj, type) and issubclass(obj, StatsView)
+                    and obj is not StatsView and obj.__module__ == modname):
+                continue
+            view = obj("lint", registry=MetricsRegistry())
+            scope = view.metric_scope  # validates registration end to end
+            assert scope == f"{obj._FAMILY}.lint", scope
+            for field in obj._SPEC:
+                names.add(f"{obj._FAMILY}.{field}")
+    return sorted(names), warnings
+
+
+def main() -> int:
+    doc = Path(sys.argv[1] if len(sys.argv) > 1 else "docs/OBSERVABILITY.md")
+    if not doc.exists():
+        print(f"check_metrics: {doc} does not exist", file=sys.stderr)
+        return 1
+    text = doc.read_text(encoding="utf-8")
+    names, warnings = collect_metric_names()
+    for w in warnings:
+        print(f"check_metrics: WARNING {w}", file=sys.stderr)
+    missing = [n for n in names if n not in text]
+    if missing:
+        print(f"check_metrics: {len(missing)} metric(s) missing from {doc}:",
+              file=sys.stderr)
+        for n in missing:
+            print(f"  - {n}", file=sys.stderr)
+        return 1
+    print(f"check_metrics: OK ({len(names)} metrics all documented in {doc})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
