@@ -1,0 +1,85 @@
+"""CI gate for fig16: fail if the resilient client loses its brownout edge.
+
+Usage: python benchmarks/check_fig16.py bench-smoke.csv
+
+Checks (from the fig16 acceptance criteria):
+  * degraded-mode throughput: the resilient client sustains >= 50% of its
+    own steady-state steps/s during the throttle storm
+  * full recovery: post-storm steps/s back to >= 75% of steady state
+  * the resilient client beats the naive (throttle-blind) client during
+    the storm
+  * the resilience machinery actually engaged: governor throttle events
+    observed, hedges fired with a nonzero win rate
+"""
+from __future__ import annotations
+
+import re
+import sys
+from typing import Dict
+
+
+def parse(path: str) -> Dict[str, Dict[str, float]]:
+    rows: Dict[str, Dict[str, float]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("fig16/"):
+                continue
+            name, _us, derived = line.split(",", 2)
+            fields = {}
+            for kv in derived.split(";"):
+                if "=" not in kv:
+                    continue
+                k, v = kv.split("=", 1)
+                m = re.match(r"-?\d+(\.\d+)?", v)
+                if m:
+                    fields[k] = float(m.group(0))
+            rows[name] = fields
+    return rows
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench-smoke.csv"
+    rows = parse(path)
+    if not rows:
+        print(f"check_fig16: no fig16 rows found in {path}", file=sys.stderr)
+        return 2
+    failures = []
+    r_steady = rows.get("fig16/resilient/steady", {}).get("steps_per_s", 0.0)
+    r_storm = rows.get("fig16/resilient/storm", {}).get("steps_per_s", 0.0)
+    r_recover = rows.get("fig16/resilient/recover", {}).get("steps_per_s", 0.0)
+    n_storm = rows.get("fig16/naive/storm", {}).get("steps_per_s", 0.0)
+    client = rows.get("fig16/resilient/client", {})
+    if r_steady <= 0:
+        failures.append("resilient steady-state delivered nothing")
+    else:
+        if r_storm < 0.5 * r_steady:
+            failures.append(
+                f"degraded throughput {r_storm:.2f} steps/s < 50% of "
+                f"steady-state {r_steady:.2f} steps/s")
+        if r_recover < 0.75 * r_steady:
+            failures.append(
+                f"post-storm recovery {r_recover:.2f} steps/s < 75% of "
+                f"steady-state {r_steady:.2f} steps/s")
+    if r_storm <= n_storm:
+        failures.append(
+            f"resilient client in-storm {r_storm:.2f} steps/s <= naive "
+            f"{n_storm:.2f} steps/s")
+    if client.get("governor_events", 0.0) <= 0:
+        failures.append("governor never saw a throttle (storm not exercised)")
+    if client.get("hedges_fired", 0.0) <= 0 or \
+            client.get("hedge_win_rate", 0.0) <= 0:
+        failures.append("hedged reads never fired/won (tail model inert)")
+    if failures:
+        print("check_fig16: brownout resilience regressed:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"check_fig16: OK ({len(rows)} fig16 rows, storm retention "
+          f"{r_storm / max(r_steady, 1e-9):.0%}, naive {n_storm:.2f} vs "
+          f"resilient {r_storm:.2f} steps/s in-storm)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

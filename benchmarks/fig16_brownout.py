@@ -1,0 +1,253 @@
+"""Fig. 16 — brownout resilience: naive vs resilient client through a
+scripted SlowDown storm.
+
+One producer force-committing TGBs and one prefetching consumer run
+end-to-end through three equal wall-clock phases on the simulated S3-class
+latency model:
+
+  steady   [0, P)   — healthy store (plus a tail of slow GETs, the hedging
+                      target);
+  storm    [P, 2P)  — load-dependent throttling: the store admits only
+                      ``TARGET_RATE`` ops/s and 503s (Retry-After) the rest,
+                      the way a real object store sheds load;
+  recover  [2P, 3P) — healthy again.
+
+Two clients face the identical script:
+
+  * ``naive``     — the pre-resilience client: 503 SlowDown is just another
+    5xx to it (no Retry-After honoring, no pacing), so it burns its flat
+    retry attempts against the empty admission bucket, escalates the
+    server-side penalty, and crawls through the storm in crash-retry loops.
+  * ``resilient`` — the same components behind ``ResilientStore``: the AIMD
+    governor collectively paces offered load just under the server target
+    (few throttles, little wasted work), retry budgets stop storms from
+    amplifying, and hedged reads clip the slow-GET tail.
+
+Per phase the derived columns report delivered steps/s and p99 step latency;
+the ``client`` row carries the resilience counters (throttles seen, hedge
+win rate, governor activity). ``benchmarks/check_fig16.py`` gates on the
+resilient client sustaining >= 50% of its steady-state throughput during the
+storm, recovering fully afterwards, and beating the naive client in-storm.
+
+``us_per_call`` is mean delivered-step latency in model-time µs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List
+
+from benchmarks.common import Row, bench_clock, bench_latency, percentile
+from repro.core import (BatchTimeout, BrownoutPhase, Consumer, FaultPolicy,
+                        FaultyObjectStore, ManifestStore, MemoryObjectStore,
+                        MeshPosition, NaivePolicy, Namespace, ObjectStore,
+                        Producer, ResilienceConfig, ResilientStore,
+                        ThrottledError, TransientStoreError)
+
+SLICE_BYTES = 64_000
+#: ops/s the store still admits during the storm — about 2/3 of the healthy
+#: pipeline's op demand (~150 ops/s), so a well-paced client can still run
+#: at a meaningful fraction of steady state while a hammering one cannot
+TARGET_RATE = 120.0
+RETRY_AFTER_S = 0.1
+#: probability / duration of the slow-GET tail (the hedging target)
+SLOW_GET_RATE = 0.15
+SLOW_GET_S = 0.06
+WARMUP_TGBS = 4
+#: the first part of the recover phase still drains in-flight Retry-After
+#: sleeps and storm backlog; the recovery *rate* is measured after it
+RECOVER_SKIP_S = 0.5
+
+PHASES = ("steady", "storm", "recover")
+
+
+class _ThrottleBlindStore(ObjectStore):
+    """The pre-resilience client's view of the store: ``ThrottledError`` is
+    flattened into a generic ``TransientStoreError``, so upstream flat
+    retries neither honor Retry-After nor adapt offered load — they just
+    hammer. (Aliases the inner store's accounting the same way
+    ``ResilientStore`` does.)"""
+
+    def __init__(self, inner):
+        # no super().__init__: all accounting lives in the inner store
+        self.inner = inner
+        self.latency = inner.latency
+        self.clock = inner.clock
+        self.faults = inner.faults
+        self.stats = inner.stats
+        self._stats_lock = inner._stats_lock
+
+    def _wrap(self, fn, *args, **kw):
+        try:
+            return fn(*args, **kw)
+        except ThrottledError as e:
+            raise TransientStoreError(str(e)) from None
+
+    def put(self, key, data):
+        return self._wrap(self.inner.put, key, data)
+
+    def put_if_absent(self, key, data):
+        return self._wrap(self.inner.put_if_absent, key, data)
+
+    def get(self, key):
+        return self._wrap(self.inner.get, key)
+
+    def get_range(self, key, start, length):
+        return self._wrap(self.inner.get_range, key, start, length)
+
+    def get_ranges(self, key, ranges, *args, **kw):
+        return self._wrap(self.inner.get_ranges, key, ranges, *args, **kw)
+
+    def head(self, key):
+        return self._wrap(self.inner.head, key)
+
+    def list(self, prefix):
+        return self._wrap(self.inner.list, prefix)
+
+    def delete(self, key):
+        return self._wrap(self.inner.delete, key)
+
+    def total_bytes(self):
+        return self.inner.total_bytes()
+
+
+def _resilient_config(seed: int) -> ResilienceConfig:
+    from repro.core import HedgePolicy
+    return ResilienceConfig(
+        seed=seed, base_delay_s=0.005, backoff_cap_s=0.1,
+        retry_budgets={"read": (32.0, 8.0), "write": (32.0, 8.0),
+                       "control": (32.0, 8.0)},
+        hedge=HedgePolicy(quantile=0.9, min_samples=16, min_delay_s=0.002),
+        # throttles never open the breaker; a high threshold keeps sporadic
+        # slow-GET timeouts from tripping it in this (no-outage) scenario
+        breaker_failure_threshold=10, breaker_cooldown_s=0.1,
+        governor_md_factor=0.8, governor_ai_per_s=10.0,
+        governor_min_rate=8.0, governor_idle_reset_s=0.5)
+
+
+def _drive(resilient: bool, phase_s: float, seed: int = 0) -> Dict:
+    clock = bench_clock()
+    inner = MemoryObjectStore(latency=bench_latency(), clock=clock)
+    faulty = FaultyObjectStore(inner, FaultPolicy(
+        seed=seed, slow_get_rate=SLOW_GET_RATE, slow_get_s=SLOW_GET_S,
+        key_filter="/tgb/"))
+    store = ResilientStore(faulty, _resilient_config(seed)) if resilient \
+        else _ThrottleBlindStore(faulty)
+    ns = Namespace(store, "runs/fig16")
+
+    prod = Producer(ns, "P", dp=1, cp=1, policy=NaivePolicy(),
+                    manifests=ManifestStore(ns),
+                    spill_limit=256 if resilient else None)
+    stop = threading.Event()
+    prod_errors = [0]
+
+    def produce() -> None:
+        while not stop.is_set():
+            try:
+                prod.write_tgb(uniform_slice_bytes=SLICE_BYTES)
+                prod.maybe_commit(force=True)
+            except TransientStoreError:
+                # the naive client's whole strategy: sleep a beat, hammer on
+                prod_errors[0] += 1
+                clock.sleep(0.01)
+
+    # warm up: a few committed TGBs (and hedge-model samples) before t0
+    for _ in range(WARMUP_TGBS):
+        prod.write_tgb(uniform_slice_bytes=SLICE_BYTES)
+        prod.maybe_commit(force=True)
+
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1), prefetch_depth=4)
+    cons.next_batch(timeout_s=30.0)  # first delivery outside the timed window
+
+    t0 = faulty.script_brownout([
+        BrownoutPhase(phase_s, 2 * phase_s, target_rate=TARGET_RATE,
+                      retry_after_s=RETRY_AFTER_S)])
+    worker = threading.Thread(target=produce, daemon=True)
+    worker.start()
+
+    completions: List[tuple] = []   # (t_rel, step_latency_s)
+    cons_errors = 0
+    deadline = t0 + 3 * phase_s
+    while True:
+        now = clock.now()
+        if now >= deadline:
+            break
+        t_start = now
+        try:
+            payload = cons.next_batch(timeout_s=min(1.0, deadline - now))
+        except BatchTimeout:
+            continue
+        except TransientStoreError:
+            cons_errors += 1
+            continue
+        t_done = clock.now()
+        assert len(payload) == SLICE_BYTES, "corrupt batch escaped the CRC"
+        completions.append((t_done - t0, t_done - t_start))
+
+    stop.set()
+    faulty.clear_brownout()
+    worker.join(timeout=30.0)
+    cons.stop_prefetch()
+
+    by_phase: Dict[str, List[float]] = {p: [] for p in PHASES}
+    for t_rel, lat in completions:
+        idx = min(2, int(t_rel // phase_s))
+        by_phase[PHASES[idx]].append(lat)
+
+    out: Dict = {"phase_s": phase_s, "by_phase": by_phase,
+                 "recover_n": sum(1 for t_rel, _ in completions
+                                  if t_rel >= 2 * phase_s + RECOVER_SKIP_S),
+                 "prod_errors": prod_errors[0], "cons_errors": cons_errors,
+                 "throttles_injected": faulty.fault_stats.counts.get(
+                     "throttled", 0)}
+    if resilient:
+        r = store.resilience
+        out["resilience"] = {
+            "throttled": r.throttled, "retries": r.retries,
+            "hedges_fired": r.hedges_fired, "hedges_won": r.hedges_won,
+            "hedge_win_rate": r.hedge_win_rate,
+            "breaker_opens": r.breaker_opens,
+            "governor_events": store.governor.throttle_events,
+            "spilled": prod.stats.tgbs_spilled,
+            "replayed": prod.stats.spill_replayed,
+        }
+        store.close()
+    return out
+
+
+def _rows(variant: str, res: Dict) -> List[Row]:
+    rows: List[Row] = []
+    for ph in PHASES:
+        lats = res["by_phase"][ph]
+        n = len(lats)
+        if ph == "recover":
+            rate = res["recover_n"] / (res["phase_s"] - RECOVER_SKIP_S)
+        else:
+            rate = n / res["phase_s"]
+        mean_us = (sum(lats) / n * 1e6) if n else 0.0
+        p99_ms = percentile(sorted(lats), 99) * 1e3 if n else 0.0
+        rows.append(Row(f"fig16/{variant}/{ph}", mean_us,
+                        f"steps_per_s={rate:.2f};p99_ms={p99_ms:.1f};"
+                        f"delivered={n}"))
+    extra = res.get("resilience", {})
+    rows.append(Row(
+        f"fig16/{variant}/client", 0.0,
+        f"prod_errors={res['prod_errors']};cons_errors={res['cons_errors']};"
+        f"throttles_injected={res['throttles_injected']};"
+        f"throttled={extra.get('throttled', 0)};"
+        f"retries={extra.get('retries', 0)};"
+        f"hedges_fired={extra.get('hedges_fired', 0)};"
+        f"hedges_won={extra.get('hedges_won', 0)};"
+        f"hedge_win_rate={extra.get('hedge_win_rate', 0.0):.3f};"
+        f"breaker_opens={extra.get('breaker_opens', 0)};"
+        f"governor_events={extra.get('governor_events', 0)};"
+        f"spilled={extra.get('spilled', 0)};"
+        f"replayed={extra.get('replayed', 0)}"))
+    return rows
+
+
+def run(quick: bool = True) -> List[Row]:
+    phase_s = 3.0 if quick else 6.0
+    rows: List[Row] = []
+    for variant, resilient in (("naive", False), ("resilient", True)):
+        rows.extend(_rows(variant, _drive(resilient, phase_s)))
+    return rows

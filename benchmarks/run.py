@@ -23,6 +23,7 @@ FIGS = [
     ("fig13", "benchmarks.fig13_failure_isolation"),
     ("fig14", "benchmarks.fig14_aligned_recovery"),
     ("fig15", "benchmarks.fig15_derived_streams"),
+    ("fig16", "benchmarks.fig16_brownout"),
 ]
 
 

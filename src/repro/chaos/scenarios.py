@@ -21,6 +21,10 @@ Protocol points covered:
                                  outputs and committing the derive cursor
   producer_kill_obs_postmortem   killed producer diagnosed post-mortem from
                                  its flight-recorder snapshots alone
+  brownout_throttle_storm        producers + consumer ride out a scripted 503
+                                 SlowDown storm behind the ResilientStore
+  store_outage_resume            full store outage mid-run: consumer serves
+                                 prefetched TGBs, producer spills and replays
 """
 from __future__ import annotations
 
@@ -28,9 +32,10 @@ import threading
 
 import numpy as np
 
-from repro.core import (Consumer, FaultPolicy, FaultyObjectStore,
-                        InjectedCrash, ManifestStore, MemoryObjectStore,
-                        MeshPosition, Namespace, Producer, Reclaimer,
+from repro.core import (BrownoutPhase, Consumer, FaultPolicy,
+                        FaultyObjectStore, InjectedCrash, ManifestStore,
+                        MemoryObjectStore, MeshPosition, Namespace, Producer,
+                        Reclaimer, ResilienceConfig, ResilientStore,
                         Watermark, write_watermark)
 from repro.dataplane import Topology
 from repro.run import TrainSession
@@ -515,3 +520,172 @@ def derive_worker_midpublish_kill(seed: int = 0) -> ScenarioResult:
                           recovery_latency_s=recovery_latency,
                           orphans_detected=orphans, faults_injected=1,
                           fsck_clean_after=True)
+
+
+@scenario("brownout_throttle_storm")
+def brownout_throttle_storm(seed: int = 0) -> ScenarioResult:
+    """Two producers and a live consumer ride out a scripted 503 SlowDown
+    storm behind the ``ResilientStore``: throttles feed the shared AIMD
+    governor (collective backoff), Retry-After is honored, spilling absorbs
+    retry-budget exhaustion, and the streams stay gap-free and
+    duplicate-free."""
+    inner = MemoryObjectStore()
+    faulty = FaultyObjectStore(inner, FaultPolicy(seed=seed))
+    store = ResilientStore(faulty, ResilienceConfig(
+        seed=seed, base_delay_s=0.002, backoff_cap_s=0.05,
+        breaker_failure_threshold=8, breaker_cooldown_s=0.05,
+        governor_min_rate=20.0, governor_ai_per_s=100.0))
+    ns = Namespace(store, CHAOS_PREFIX)
+    n_producers, per = 2, 6
+    producers = [Producer(ns, f"P{i}", dp=1, cp=1, spill_limit=per)
+                 for i in range(n_producers)]
+    errs: list = []
+
+    def produce_body(p: Producer):
+        try:
+            p.recover()
+            while p.next_offset < per:
+                p.write_tgb(slice_payloads=make_slices(
+                    p.producer_id, p.next_offset, p.dp, p.cp))
+                p.maybe_commit(force=True)
+            p.finalize()
+        except Exception as e:
+            errs.append((p.producer_id, e))
+
+    got: list = []
+
+    def consume_body():
+        try:
+            cons = Consumer(ns, MeshPosition(0, 0, 1, 1))
+            for _ in range(n_producers * per):
+                got.append(cons.next_batch(timeout_s=30.0))
+        except Exception as e:
+            errs.append(("consumer", e))
+
+    # storm covers roughly the first half of the run: 60% of ops rejected
+    # with Retry-After while it lasts
+    faulty.script_brownout([BrownoutPhase(0.0, 0.4, throttle_rate=0.6,
+                                          retry_after_s=0.004)])
+    t0 = now()
+    threads = [threading.Thread(target=produce_body, args=(p,))
+               for p in producers]
+    threads.append(threading.Thread(target=consume_body))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    elapsed = now() - t0
+    assert not errs, f"clients died in the storm: {errs}"
+
+    throttled = faulty.fault_stats.counts.get("throttled", 0)
+    assert throttled > 0, "storm never actually throttled anything"
+    assert store.resilience.throttled > 0, \
+        "resilience layer did not observe the throttles"
+    assert store.governor.throttle_events > 0, \
+        "AIMD governor never engaged during the storm"
+
+    # per-producer stream integrity + exactly-once delivery
+    clean_ns = Namespace(inner, CHAOS_PREFIX)
+    view = latest_view(clean_ns)
+    for i in range(n_producers):
+        seqs = [t.producer_seq for t in view.tgbs
+                if t.producer_id == f"P{i}"]
+        assert seqs == list(range(per)), \
+            f"P{i} stream corrupted by the storm: {seqs}"
+    per_pid: dict = {}
+    for payload in got:
+        pid, off = bytes(payload).split(b"|", 1)[0].decode().split(":")[:2]
+        per_pid.setdefault(pid, []).append(int(off))
+    for i in range(n_producers):
+        offs = per_pid.get(f"P{i}", [])
+        assert offs == list(range(per)), f"P{i} delivered {offs}"
+    report = fsck(clean_ns)
+    assert report.clean, report.summary()
+    spilled = sum(p.stats.tgbs_spilled for p in producers)
+    replayed = sum(p.stats.spill_replayed for p in producers)
+    assert spilled == replayed, \
+        f"spill not fully replayed: {spilled} spilled, {replayed} replayed"
+    return ScenarioResult(
+        name="brownout_throttle_storm", passed=True,
+        steps_delivered=n_producers * per, recovery_latency_s=elapsed,
+        faults_injected=faulty.fault_stats.total, fsck_clean_after=True,
+        detail=f"{throttled} throttles, {store.resilience.retries} retries, "
+               f"{spilled} spilled")
+
+
+@scenario("store_outage_resume")
+def store_outage_resume(seed: int = 0) -> ScenarioResult:
+    """The store disappears entirely mid-run. The shared circuit breaker
+    flips both clients into degraded mode: the consumer keeps serving
+    already-prefetched TGBs (zero store round trips), the producer spills
+    built TGBs into its bounded queue; on recovery the spill replays in
+    producer_seq order, commits dedup exactly-once, and fsck is clean."""
+    inner = MemoryObjectStore()
+    faulty = FaultyObjectStore(inner, FaultPolicy(seed=seed))
+    store = ResilientStore(faulty, ResilienceConfig(
+        seed=seed, read_attempts=2, write_attempts=2, base_delay_s=0.002,
+        backoff_cap_s=0.02, breaker_failure_threshold=3,
+        breaker_cooldown_s=0.05))
+    ns = Namespace(store, CHAOS_PREFIX)
+    pre, during, total = 3, 4, 7
+
+    p = Producer(ns, "P", dp=1, cp=1, spill_limit=during)
+    p.recover()
+    for _ in range(pre):
+        p.write_tgb(slice_payloads=make_slices("P", p.next_offset, 1, 1))
+        p.maybe_commit(force=True)
+
+    cons = Consumer(ns, MeshPosition(0, 0, 1, 1), prefetch_depth=4)
+    cons.poll()
+    cons.start_prefetch()
+    deadline = now() + 10.0
+    while now() < deadline:
+        with cons._prefetch_lock:
+            if len(cons._prefetched) >= pre:
+                break
+        inner.clock.sleep(0.002)
+    with cons._prefetch_lock:
+        warm = len(cons._prefetched)
+    assert warm >= pre, f"prefetch only warmed {warm}/{pre} steps"
+
+    # lights out: every op fails until the script is cleared
+    faulty.script_brownout([BrownoutPhase(0.0, 3600.0, outage=True)])
+    t0 = now()
+    for _ in range(during):
+        p.write_tgb(slice_payloads=make_slices("P", p.next_offset, 1, 1))
+        p.maybe_commit()
+    assert p.spilled == during, \
+        f"expected {during} spilled TGBs, got {p.spilled}"
+    assert p.stats.store_degraded == 1.0
+    got = drain(cons, pre, timeout_s=30.0)  # served from prefetch, store down
+    assert store.degraded, "breaker never opened during the outage"
+    assert cons.stats.degraded_batches > 0, \
+        "degraded-mode service not surfaced in consumer obs"
+    assert cons.stats.store_degraded == 1.0
+
+    # recovery: clear the script, replay the spill, drain the rest
+    faulty.clear_brownout()
+    p.finalize()
+    recovery_latency = now() - t0
+    assert p.spilled == 0 and p.stats.spill_replayed == during, \
+        f"spill replay incomplete: {p.spilled} left, " \
+        f"{p.stats.spill_replayed} replayed"
+    got += drain(cons, total - pre, timeout_s=30.0)
+    cons.stop_prefetch()
+    assert_exactly_once(got, "P", 0, 0, total)
+
+    clean_ns = Namespace(inner, CHAOS_PREFIX)
+    view = latest_view(clean_ns)
+    seqs = [t.producer_seq for t in view.tgbs]
+    assert seqs == list(range(total)), \
+        f"replayed stream not in producer_seq order: {seqs}"
+    report = fsck(clean_ns)
+    assert report.clean, report.summary()
+    outages = faulty.fault_stats.counts.get("outage", 0)
+    return ScenarioResult(
+        name="store_outage_resume", passed=True, steps_delivered=total,
+        recovery_latency_s=recovery_latency, faults_injected=outages,
+        fsck_clean_after=True,
+        detail=f"{during} spilled+replayed, "
+               f"{cons.stats.degraded_batches} degraded batches, "
+               f"breaker opened {store.breaker.opens}x")

@@ -10,16 +10,26 @@ Public surface:
   Clients                — Producer, Consumer, MeshPosition
   Lifecycle              — Watermark, Reclaimer, write_watermark, global_watermark
   Fault injection        — FaultyObjectStore/FaultPolicy (seeded 5xx, lost
-                           acks, slow/partial GETs, stale reads) and
-                           FaultInjector (crash at the Nth matching op)
+                           acks, slow/partial GETs, stale reads, scripted
+                           BrownoutPhase windows) and FaultInjector (crash at
+                           the Nth matching op)
+  Resilience layer       — ResilientStore (backoff + retry budgets, AIMD
+                           throttle governor, hedged reads, circuit breaker
+                           / degraded mode) and its error taxonomy
+                           (ThrottledError, CircuitOpenError,
+                           RetryBudgetExhausted)
 """
 from repro.core.clock import Clock, SystemClock, VirtualClock
 from repro.core.commit import CommitProtocol, CommitResult
-from repro.core.errors import BatchTimeout, TransientStoreError
+from repro.core.errors import (BatchTimeout, CircuitOpenError,
+                               RetryBudgetExhausted, ThrottledError,
+                               TransientStoreError, backoff_delays,
+                               retry_transient)
 from repro.core.consumer import (Consumer, ConsumerStats, MeshPosition,
                                  convert_logical_step, floor_to_data_step,
                                  remap_step)
-from repro.core.faults import FaultPolicy, FaultStats, FaultyObjectStore
+from repro.core.faults import (BrownoutPhase, FaultPolicy, FaultStats,
+                               FaultyObjectStore)
 from repro.core.dac import (AIMDPolicy, CommitPolicy, DACConfig, DACPolicy,
                             FixedCountPolicy, IncrPolicy, NaivePolicy,
                             make_policy)
@@ -27,21 +37,31 @@ from repro.core.lifecycle import (Reclaimer, Watermark, global_watermark,
                                   read_trim_marker, read_watermarks,
                                   write_watermark)
 from repro.core.manifest import (DatasetView, ManifestStore, ProducerState,
-                                 MANIFEST_FORMAT_DELTA, MANIFEST_FORMAT_FLAT)
+                                 StepUnavailable, MANIFEST_FORMAT_DELTA,
+                                 MANIFEST_FORMAT_FLAT)
 from repro.core.objectstore import (ConditionalPutFailed, DEFAULT_COALESCE_GAP,
                                     FaultInjector, FileObjectStore, IOPool,
                                     InjectedCrash, LatencyModel,
                                     MemoryObjectStore, Namespace, NoSuchKey,
                                     ObjectStore, ZERO_LATENCY, coalesce_ranges)
 from repro.core.producer import Producer, ProducerStats, run_producer_loop
+from repro.core.resilience import (AIMDGovernor, CircuitBreaker, HedgePolicy,
+                                   ResilienceConfig, ResilientStore,
+                                   RetryBudget, StoreResilienceStats,
+                                   shared_governor, wrap_store)
 from repro.core.stats import LatencyWindow, percentile, percentiles
 from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TGBBuilder, TGBDescriptor,
                             TGBFooter, TGBReader)
 
 __all__ = [
-    "BatchTimeout", "TransientStoreError",
+    "BatchTimeout", "TransientStoreError", "ThrottledError",
+    "CircuitOpenError", "RetryBudgetExhausted", "backoff_delays",
+    "retry_transient",
     "Clock", "SystemClock", "VirtualClock",
-    "FaultPolicy", "FaultStats", "FaultyObjectStore",
+    "BrownoutPhase", "FaultPolicy", "FaultStats", "FaultyObjectStore",
+    "AIMDGovernor", "CircuitBreaker", "HedgePolicy", "ResilienceConfig",
+    "ResilientStore", "RetryBudget", "StoreResilienceStats",
+    "shared_governor", "wrap_store",
     "CommitProtocol", "CommitResult",
     "Consumer", "ConsumerStats", "MeshPosition", "convert_logical_step",
     "floor_to_data_step", "remap_step",
@@ -49,7 +69,7 @@ __all__ = [
     "IncrPolicy", "NaivePolicy", "make_policy",
     "Reclaimer", "Watermark", "global_watermark", "read_trim_marker",
     "read_watermarks", "write_watermark",
-    "DatasetView", "ManifestStore", "ProducerState",
+    "DatasetView", "ManifestStore", "ProducerState", "StepUnavailable",
     "MANIFEST_FORMAT_DELTA", "MANIFEST_FORMAT_FLAT",
     "ConditionalPutFailed", "DEFAULT_COALESCE_GAP", "FaultInjector",
     "FileObjectStore", "IOPool", "InjectedCrash",

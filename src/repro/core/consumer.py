@@ -24,13 +24,13 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.errors import (BatchTimeout, TransientStoreError,
-                               retry_transient)
-from repro.core.manifest import DatasetView, ManifestStore
+from repro.core.errors import (BatchTimeout, FAIL_FAST_ERRORS,
+                               TransientStoreError, retry_transient)
+from repro.core.manifest import DatasetView, ManifestStore, StepUnavailable
 from repro.core.objectstore import IOPool, Namespace, NoSuchKey
 from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TAIL_BYTES, TGBFooter,
                             TGBFormatError, TGBReader)
-from repro.obs.registry import COUNTER, HISTOGRAM, StatsView
+from repro.obs.registry import COUNTER, GAUGE, HISTOGRAM, StatsView
 from repro.obs.tracer import trace_span
 
 
@@ -55,6 +55,10 @@ class ConsumerStats(StatsView):
         "read_latencies": HISTOGRAM,
         "prefetch_hits": COUNTER,
         "prefetch_misses": COUNTER,
+        # degraded mode: batches served from prefetch while the store's
+        # circuit breaker judged the backend down
+        "degraded_batches": COUNTER,
+        "store_degraded": GAUGE,
     }
 
     @property
@@ -352,12 +356,26 @@ class Consumer:
                 pass
             with self._prefetch_lock:
                 data = self._prefetched.pop(key3, None)
+        degraded = bool(getattr(self.store, "degraded", False))
+        if degraded:
+            self.stats.store_degraded = 1.0
+            if data is not None:
+                self.stats.degraded_batches += 1
+        elif self.stats.store_degraded:
+            self.stats.store_degraded = 0.0
         if data is not None:
             self.stats.prefetch_hits += 1
         else:
             self.stats.prefetch_misses += 1
             with trace_span("consumer.fetch", cat="read", step=self.step):
-                data = self._fetch_and_concat(tgb_step, d, c)
+                try:
+                    data = self._fetch_and_concat(tgb_step, d, c)
+                except FAIL_FAST_ERRORS:
+                    # breaker open / retry budget dry: the store is judged
+                    # down. Don't crash the rank — ride out the outage within
+                    # the batch deadline (a recovering store or a late
+                    # prefetch deposit both unblock us).
+                    data = self._outage_wait_fetch(key3, t0, timeout_s)
         self.stats.steps_consumed += 1
         self.stats.bytes_consumed += len(data)
         self.stats.read_latencies.append(self.clock.now() - t0)
@@ -365,6 +383,31 @@ class Consumer:
         if self._recorder is not None:
             self._recorder.maybe_snap()
         return data
+
+    def _outage_wait_fetch(self, key3: Tuple[int, int, int], t0: float,
+                           timeout_s: Optional[float]) -> bytes:
+        """Degraded-mode read: the circuit breaker is failing fast, so poll
+        gently (no retry storm) until the breaker's half-open probe lets a
+        fetch through or the batch deadline expires with ``BatchTimeout``."""
+        tgb_step, d, c = key3
+        gap = 0.01
+        while True:
+            self.stats.store_degraded = 1.0
+            if timeout_s is not None and self.clock.now() - t0 > timeout_s:
+                raise BatchTimeout(
+                    f"step {tgb_step} unreadable for {timeout_s}s "
+                    f"(store degraded)")
+            self.clock.sleep(gap)
+            gap = min(gap * 1.5, 0.25)
+            with self._prefetch_lock:
+                data = self._prefetched.pop(key3, None)
+            if data is not None:
+                self.stats.degraded_batches += 1
+                return data
+            try:
+                return self._fetch_and_concat(tgb_step, d, c)
+            except FAIL_FAST_ERRORS:
+                continue  # still down; keep waiting
 
     def _tgb_dp(self) -> int:
         # the materialized layout; all TGBs in a run share D x C (enforced by
@@ -469,8 +512,12 @@ class Consumer:
             with trace_span("prefetch.fetch", cat="prefetch",
                             tgb_step=tgb_step):
                 data = self._fetch_and_concat(tgb_step, d, c)
-        except (KeyError, NoSuchKey, TransientStoreError, TGBFormatError):
-            pass  # not fatal: next_batch will fetch the step directly
+        except (StepUnavailable, NoSuchKey, TransientStoreError,
+                TGBFormatError):
+            # Protocol conditions only (trimmed/unpublished step, stale or
+            # flaky store, corrupt read) — a bare KeyError is a bug and must
+            # propagate. Not fatal: next_batch will fetch the step directly.
+            pass
         finally:
             with self._prefetch_lock:
                 self._inflight.pop(key3, None)
@@ -512,9 +559,9 @@ class Consumer:
             else:
                 try:
                     data = self._fetch_and_concat(tgb_step, d, c)
-                except (KeyError, NoSuchKey, TransientStoreError,
+                except (StepUnavailable, NoSuchKey, TransientStoreError,
                         TGBFormatError):
-                    break
+                    break  # protocol conditions only; a bare KeyError raises
                 with self._prefetch_lock:
                     self._prefetched[key3] = data
                     self._evict_overflow()

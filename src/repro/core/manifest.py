@@ -37,6 +37,15 @@ MANIFEST_FORMAT_FLAT = "flat"
 MANIFEST_FORMAT_DELTA = "delta"
 
 
+class StepUnavailable(KeyError):
+    """``tgb_at_step`` miss: the step is trimmed or not yet published.
+
+    A *protocol* condition, not a programming error — subclassing ``KeyError``
+    keeps legacy handlers working, while giving retry/poll loops a type to
+    catch that can never swallow a genuine ``KeyError`` bug (the reason the
+    consumer's broad except blocks were narrowed to this)."""
+
+
 @dataclass(frozen=True)
 class ProducerState:
     """Durable per-producer resumption state (paper §5.3): the stream offset up
@@ -74,9 +83,11 @@ class DatasetView:
     def tgb_at_step(self, step: int) -> TGBDescriptor:
         idx = step - self.base_step
         if idx < 0:
-            raise KeyError(f"step {step} was trimmed (base_step={self.base_step})")
+            raise StepUnavailable(
+                f"step {step} was trimmed (base_step={self.base_step})")
         if idx >= len(self.tgbs):
-            raise KeyError(f"step {step} not yet published (total={self.total_steps})")
+            raise StepUnavailable(
+                f"step {step} not yet published (total={self.total_steps})")
         return self.tgbs[idx]
 
     def producer_offset(self, producer_id: str) -> int:

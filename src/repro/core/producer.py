@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import threading
 import uuid
+from collections import deque
 from concurrent.futures import Future
-from typing import Callable, List, Optional
+from typing import Callable, Deque, List, Optional, Tuple
 
 from repro.core.commit import CommitProtocol
 from repro.core.dac import CommitPolicy, DACPolicy
@@ -53,6 +54,11 @@ class ProducerStats(StatsView):
         "tau_sum": GAUGE,
         "gap_samples": HISTOGRAM,
         "throttled_time": GAUGE,
+        # degraded-mode (store outage) survival
+        "tgbs_spilled": COUNTER,
+        "spill_replayed": COUNTER,
+        "commits_deferred": COUNTER,
+        "store_degraded": GAUGE,
     }
 
     @property
@@ -71,7 +77,8 @@ class Producer:
                  epoch: int = 0,
                  pipeline_commits: bool = False,
                  io_pool: Optional[IOPool] = None,
-                 obs_snap_interval_s: Optional[float] = None):
+                 obs_snap_interval_s: Optional[float] = None,
+                 spill_limit: Optional[int] = None):
         self.ns = ns
         self.store = ns.store
         self.clock = self.store.clock
@@ -105,6 +112,17 @@ class Producer:
         self._io_pool = io_pool
         self._commit_future: Optional[Future] = None
         self._commit_lock = threading.Lock()
+        # Degraded-mode survival (store outage): built TGBs whose upload (or
+        # whose predecessors' uploads) failed wait here as (key, blob, desc,
+        # content_addressed) and are replayed strictly in producer_seq order
+        # once the store answers again — descriptors only enter ``pending``
+        # after their bytes are durable, so commit order and exactly-once are
+        # preserved across the outage. ``spill_limit=None`` disables spilling
+        # (original fail-on-upload behavior).
+        self.spill_limit = spill_limit
+        self._spill: Deque[Tuple[str, bytes, TGBDescriptor, bool]] = deque()
+        # last successfully read trim marker, reused when the probe is flaky
+        self._last_safe_step = 0
 
     @property
     def io_pool(self) -> IOPool:
@@ -158,28 +176,92 @@ class Producer:
                                          uniform_slice_bytes or 1024,
                                          num_samples=num_samples,
                                          token_count=token_count)
+        desc = TGBDescriptor(
+            tgb_id=tgb_id, object_key=key, size_bytes=len(blob),
+            dp=self.dp, cp=self.cp, num_samples=num_samples,
+            token_count=token_count, producer_id=self.producer_id,
+            producer_seq=offset, provenance=provenance)
+        content_addressed = content_token is not None
+        self._try_replay_spill()
+        if self._spill:
+            # earlier TGBs are still waiting on the store: this one must queue
+            # behind them (descriptors enter ``pending`` in seq order)
+            self._enqueue_spill(key, blob, desc, content_addressed, None)
+            self.next_offset = offset + 1
+            return desc
+        try:
+            self._upload_blob(key, blob, offset, content_addressed)
+        except TransientStoreError as e:
+            if self.spill_limit is None:
+                # without spilling the offset is NOT consumed: the caller may
+                # retry write_tgb and reuse it (no gap in the stream)
+                raise
+            self._enqueue_spill(key, blob, desc, content_addressed, e)
+            self.next_offset = offset + 1
+            return desc
+        self._accept(desc, len(blob))
+        self.next_offset = offset + 1
+        return desc
+
+    def _upload_blob(self, key: str, blob: bytes, offset: int,
+                     content_addressed: bool) -> None:
         # TGB objects are immutable and keyed by (producer, offset, token), so
         # retrying the same PUT after a transient 5xx is idempotent — "lost"
         # writes are simply written again. Content-addressed objects are
         # additionally *deduplicated*: if the key already exists the bytes are
         # byte-identical by construction, so the upload is skipped.
-        if content_token is not None and \
+        if content_addressed and \
                 retry_transient(lambda: self.store.exists(key), self.clock):
             self.stats.puts_skipped += 1
         else:
             with trace_span("producer.upload", cat="commit", offset=offset,
                             bytes=len(blob)):
                 retry_transient(lambda: self.store.put(key, blob), self.clock)
-        desc = TGBDescriptor(
-            tgb_id=tgb_id, object_key=key, size_bytes=len(blob),
-            dp=self.dp, cp=self.cp, num_samples=num_samples,
-            token_count=token_count, producer_id=self.producer_id,
-            producer_seq=offset, provenance=provenance)
+
+    def _accept(self, desc: TGBDescriptor, nbytes: int) -> None:
+        """The TGB's bytes are durable: it may now be offered for commit."""
         self.pending.append(desc)
-        self.next_offset = offset + 1
         self.stats.tgbs_written += 1
-        self.stats.bytes_written += len(blob)
-        return desc
+        self.stats.bytes_written += nbytes
+
+    def _enqueue_spill(self, key: str, blob: bytes, desc: TGBDescriptor,
+                       content_addressed: bool,
+                       cause: Optional[Exception]) -> None:
+        if self.spill_limit is not None and \
+                len(self._spill) >= self.spill_limit:
+            # bounded queue full: surface the storage failure as backpressure
+            raise TransientStoreError(
+                f"{self.producer_id}: spill queue full "
+                f"({self.spill_limit} TGBs)") from cause
+        self._spill.append((key, blob, desc, content_addressed))
+        self.stats.tgbs_spilled += 1
+        self.stats.store_degraded = 1.0
+
+    @property
+    def spill_full(self) -> bool:
+        return self.spill_limit is not None and \
+            len(self._spill) >= self.spill_limit
+
+    @property
+    def spilled(self) -> int:
+        return len(self._spill)
+
+    def _try_replay_spill(self) -> bool:
+        """Replay spilled TGBs strictly in producer_seq order; stop at the
+        first upload that still fails. Returns True iff the queue drained."""
+        while self._spill:
+            key, blob, desc, content_addressed = self._spill[0]
+            try:
+                self._upload_blob(key, blob, desc.producer_seq,
+                                  content_addressed)
+            except TransientStoreError:
+                return False
+            self._spill.popleft()
+            self._accept(desc, len(blob))
+            self.stats.spill_replayed += 1
+        if self.stats.store_degraded:
+            self.stats.store_degraded = 0.0
+        return True
 
     # ------------------------------------------------------------------
     def maybe_commit(self, trim_to_step: Optional[int] = None, force: bool = False) -> bool:
@@ -188,9 +270,27 @@ class Producer:
         mode a freshly scheduled attempt reports on a later call)."""
         if self._recorder is not None:
             self._recorder.maybe_snap()
-        if self.pipeline_commits:
-            return self._maybe_commit_pipelined(trim_to_step, force)
-        return self._commit_sync(self.pending, trim_to_step, force)
+        if self._spill:
+            self._try_replay_spill()
+        try:
+            if self.pipeline_commits:
+                ok = self._maybe_commit_pipelined(trim_to_step, force)
+            else:
+                ok = self._commit_sync(self.pending, trim_to_step, force)
+            if ok and not self._spill and self.stats.store_degraded:
+                self.stats.store_degraded = 0.0
+            return ok
+        except TransientStoreError:
+            # Degraded mode: the manifest put (or its read-back) is failing
+            # against a browning-out store. With spilling enabled the commit
+            # is *deferred*, not fatal — pending TGBs stay queued and the next
+            # cadence tick retries; without spilling the caller keeps the
+            # original fail-loud behavior.
+            if self.spill_limit is None:
+                raise
+            self.stats.commits_deferred += 1
+            self.stats.store_degraded = 1.0
+            return False
 
     def _commit_sync(self, batch: List[TGBDescriptor],
                      trim_to_step: Optional[int], force: bool) -> bool:
@@ -246,16 +346,17 @@ class Producer:
     def finalize(self, max_attempts: int = 1000) -> None:
         """Drain remaining uncommitted TGBs before exiting (Alg. 1 finalization)."""
         attempts = 0
-        while self.pending and attempts < max_attempts:
+        while (self.pending or self._spill) and attempts < max_attempts:
             ok = self.maybe_commit(force=True)
             attempts += 1
-            if not ok and self.pending:
+            if not ok and (self.pending or self._spill):
                 # brief backoff using the policy's current notion of gap
                 gap = getattr(self.policy, "gap", 0.01) or 0.01
                 self.clock.sleep(min(gap, 0.25))
-        if self.pending:
+        if self.pending or self._spill:
             raise RuntimeError(f"{self.producer_id}: finalize failed to drain "
-                               f"{len(self.pending)} TGBs")
+                               f"{len(self.pending)} pending + "
+                               f"{len(self._spill)} spilled TGBs")
         if self._recorder is not None:
             self._recorder.close()  # last-word snapshot for post-mortems
 
@@ -268,10 +369,14 @@ class Producer:
         view = self.protocol.view
         try:
             trim = read_trim_marker(self.ns)
-            safe_step = trim[0] if trim is not None else 0
+            self._last_safe_step = trim[0] if trim is not None else 0
         except TransientStoreError:
-            safe_step = 0  # throttling probe only; flaky reads as 0
-        ahead = (view.total_steps + len(self.pending)) - safe_step
+            # Flaky probe: reuse the last successfully read trim step. The
+            # old behavior (treat the read as step 0) silently stalled the
+            # pool — with a real trim marker at step N, one 5xx made every
+            # producer look max_lag ahead and pause until the next clean read.
+            pass
+        ahead = (view.total_steps + len(self.pending)) - self._last_safe_step
         return ahead >= self.max_lag
 
 
@@ -290,11 +395,11 @@ def run_producer_loop(producer: Producer, n_tgbs: int,
             break
         if deadline_s is not None and clock.now() - t_start > deadline_s:
             break
-        if producer.lag_exceeded():
+        if producer.lag_exceeded() or producer.spill_full:
             t0 = clock.now()
             clock.sleep(0.05)
             producer.stats.throttled_time += clock.now() - t0
-            producer.maybe_commit()
+            producer.maybe_commit()  # also replays spilled TGBs when possible
             continue
         if produce_delay_s:
             clock.sleep(produce_delay_s)

@@ -24,6 +24,7 @@ from repro.core.lifecycle import Reclaimer, Watermark, write_watermark
 from repro.core.manifest import ManifestStore
 from repro.core.objectstore import IOPool, Namespace, ObjectStore
 from repro.core.producer import Producer
+from repro.core.resilience import wrap_store
 from repro.dataplane._base import PackingWriterMixin, SessionBase
 from repro.dataplane.types import (Batch, Checkpoint, Topology,
                                    UnsupportedOperation)
@@ -37,7 +38,8 @@ class TGBWriter(PackingWriterMixin):
                  max_lag: Optional[int] = None,
                  pipeline_commits: bool = False,
                  io_pool: Optional[IOPool] = None,
-                 obs_snap_interval_s: Optional[float] = None):
+                 obs_snap_interval_s: Optional[float] = None,
+                 spill_limit: Optional[int] = None):
         self.topology = topology
         self.writer_id = writer_id
         self.producer = Producer(ns, writer_id, dp=topology.dp, cp=topology.cp,
@@ -45,7 +47,8 @@ class TGBWriter(PackingWriterMixin):
                                  max_lag=max_lag,
                                  pipeline_commits=pipeline_commits,
                                  io_pool=io_pool,
-                                 obs_snap_interval_s=obs_snap_interval_s)
+                                 obs_snap_interval_s=obs_snap_interval_s,
+                                 spill_limit=spill_limit)
         self.recovered_offset = 0
 
     # -- lifecycle -----------------------------------------------------------
@@ -197,10 +200,18 @@ class TGBSession(SessionBase):
                  expected_ranks: Optional[int] = None,
                  io_pool: Optional[IOPool] = None,
                  data_topology: Optional[Topology] = None,
-                 obs_snap_interval_s: Optional[float] = None):
+                 obs_snap_interval_s: Optional[float] = None,
+                 resilience=None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
+        # resilience=True / ResilienceConfig: every client this session vends
+        # talks to the store through one shared ResilientStore (backoff +
+        # retry budgets, throttle governor, hedged reads, circuit breaker)
+        store = wrap_store(store, resilience)
+        if resilience and obs_snap_interval_s is not None:
+            store.attach_recorder(Namespace(store, namespace),
+                                  obs_snap_interval_s)
         self.store = store
         self.topology = topology
         # the layout producers materialize TGBs at; defaults to the consuming
@@ -223,11 +234,13 @@ class TGBSession(SessionBase):
     def writer(self, writer_id: str = "w0", *,
                policy: Optional[CommitPolicy] = None,
                max_lag: Optional[int] = None,
-               pipeline_commits: bool = False) -> TGBWriter:
+               pipeline_commits: bool = False,
+               spill_limit: Optional[int] = None) -> TGBWriter:
         return TGBWriter(self.ns, self.data_topology, writer_id, policy=policy,
                          max_lag=max_lag, pipeline_commits=pipeline_commits,
                          io_pool=self._io_pool,
-                         obs_snap_interval_s=self._obs_snap_interval_s)
+                         obs_snap_interval_s=self._obs_snap_interval_s,
+                         spill_limit=spill_limit)
 
     def reader(self, dp_rank: int = 0, cp_rank: int = 0, *,
                prefetch_depth: int = 4, dense_read: bool = False,

@@ -18,7 +18,11 @@ Family-specific derived fields:
     count, and **ingestion lag**: the manifest frontier's total steps minus
     the steps this incarnation consumed (how far the reader trails what is
     already committed);
-  * ``derive.*``    — windows completed, store-hit ratio.
+  * ``derive.*``    — windows completed, store-hit ratio;
+  * ``store.*``     — resilience layer: hedge win rate (hedges_won /
+    hedges_fired), breaker state rendered as closed/half-open/open, breaker
+    opens, retry-budget exhaustions (brownout/outage diagnosis — see
+    docs/OPERATIONS.md "Brownout and outage runbook").
 """
 from __future__ import annotations
 
@@ -107,6 +111,12 @@ def component_summary(ns: Namespace, component: str,
         derived = _scalar(fields, "tgbs_derived")
         out["store_hit_ratio"] = \
             _scalar(fields, "store_hits") / max(1, derived)
+    elif family == "store":
+        fired = _scalar(fields, "hedges_fired")
+        out["hedge_win_rate"] = _scalar(fields, "hedges_won") / max(1, fired)
+        out["breaker"] = {0: "closed", 1: "half-open", 2: "open"}.get(
+            int(_scalar(fields, "breaker_state")), "?")
+        out["throttled_per_s"] = rates.get("throttled_per_s")
     return out
 
 

@@ -24,6 +24,7 @@ from typing import Dict, List, Mapping, Optional
 
 from repro.core.dac import CommitPolicy
 from repro.core.objectstore import IOPool, Namespace, ObjectStore
+from repro.core.resilience import wrap_store
 from repro.dataplane._base import SessionBase
 from repro.dataplane.tgb_backend import TGBWriter
 from repro.dataplane.types import Checkpoint, Topology
@@ -45,10 +46,14 @@ class MultiStreamSession(SessionBase):
                  resume: "Checkpoint | str | None" = None,
                  expected_ranks: Optional[int] = None,
                  io_pool: Optional[IOPool] = None,
-                 data_topology: Optional[Topology] = None):
+                 data_topology: Optional[Topology] = None,
+                 resilience=None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
+        # one shared resilience layer for every stream's clients (same
+        # breaker/governor — the whole run backs off together)
+        store = wrap_store(store, resilience)
         self.store = store
         self.topology = topology
         # the layout producers materialized (and keep materializing) at; if
@@ -104,7 +109,8 @@ class MultiStreamSession(SessionBase):
     def writer(self, writer_id: str = "w0", *, stream: Optional[str] = None,
                policy: Optional[CommitPolicy] = None,
                max_lag: Optional[int] = None,
-               pipeline_commits: bool = False) -> TGBWriter:
+               pipeline_commits: bool = False,
+               spill_limit: Optional[int] = None) -> TGBWriter:
         """A producer handle bound to one named stream."""
         if stream is None or stream not in self.streams:
             raise ValueError(
@@ -113,7 +119,7 @@ class MultiStreamSession(SessionBase):
         return TGBWriter(self.streams[stream].ns, self.data_topology,
                          writer_id, policy=policy, max_lag=max_lag,
                          pipeline_commits=pipeline_commits,
-                         io_pool=self._io_pool)
+                         io_pool=self._io_pool, spill_limit=spill_limit)
 
     def reader(self, dp_rank: int = 0, cp_rank: int = 0, *,
                prefetch_depth: int = 4, dense_read: bool = False,

@@ -27,6 +27,7 @@ STATS_MODULES = [
     "repro.core.producer",
     "repro.core.consumer",
     "repro.core.lifecycle",
+    "repro.core.resilience",
     "repro.run.session",
     "repro.graph.worker",
     "repro.data.mq",
