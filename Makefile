@@ -12,7 +12,7 @@ test-fast:
 		tests/test_consumer.py tests/test_manifest_commit.py tests/test_dac.py
 
 bench-smoke:
-	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10,fig11,fig12,fig13,fig14,fig15,fig16
+	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10,fig11,fig12,fig13,fig14,fig15,fig16,fig17
 
 chaos:
 	$(PYTHON) -m repro.chaos

@@ -24,6 +24,7 @@ FIGS = [
     ("fig14", "benchmarks.fig14_aligned_recovery"),
     ("fig15", "benchmarks.fig15_derived_streams"),
     ("fig16", "benchmarks.fig16_brownout"),
+    ("fig17", "benchmarks.fig17_fused_train"),
 ]
 
 

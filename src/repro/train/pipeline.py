@@ -1,0 +1,565 @@
+"""FusedTrainLoop: drive the Pallas training step straight off live streams.
+
+This is the layer that connects the repo's two halves — the object-store data
+plane (``Consumer``/``MixedReader`` behind the dataplane facade) and the jax
+training step (``train/step.py`` over real models + Pallas kernels). The paper
+claims the disaggregated plane keeps training *compute-bound*; this loop is
+where that claim is measured rather than asserted (fig17).
+
+Structure (one trainer process)::
+
+      readers (d,c) --+                    +-------------------+
+      or token pull   |   staging thread   |   staging ring    |   trainer
+      ----------------+-> fetch -> pack -> | [N+1][N+2]..depth | -> step(N)
+                          decode_slice     |  device_put here  |
+                          np.block fan-in  +-------------------+
+
+  * **double-buffered staging ring** — a bounded ring of ``depth`` batches.
+    The staging thread fetches batch N+1, assembles the ``(GB, S)`` grid, and
+    issues ``jax.device_put`` (blocking until the transfer lands) while the
+    trainer runs the step on batch N. At ``depth=0`` the ring degenerates to
+    a fully synchronous fetch+h2d on the critical path — the baseline arm.
+  * **fused packing** — ``PackingTokenSource`` runs ``GlobalBatchPacker`` /
+    ``decode_slice`` inside the staging thread, so tokenize-side packing
+    never sits on the critical path; ``ReaderFanInSource`` does the per-rank
+    ``Batch.tokens`` fan-in there for the same reason.
+  * **stall attribution** — every step records data-wait / h2d / compute
+    through ``repro.obs`` spans (``pipeline.data_wait``, ``pipeline.h2d``,
+    ``pipeline.compute``; the overlapped staging work is ``pipeline.stage.*``
+    so it never double-counts against the critical path), and
+    ``FusedReport.attribution`` cross-checks measured compute against the
+    ``launch/roofline.py`` ideal: compute drifting off the roofline is a
+    kernel regression, data-wait growing under flat compute is a data-plane
+    regression.
+
+Checkpointing: the ring intentionally runs reader cursors *ahead* of the
+trainer. ``aligned_checkpoint`` parks the staging thread, rewinds the source
+to the consumed frontier (the cursor snapshot taken before the oldest staged
+fetch), commits through ``TrainSession.checkpoint`` so the RunManifest binds
+exactly the next unconsumed batch, then resumes; re-fetching the drained
+entries is idempotent (TGBs are immutable). Restart replays byte-identical
+global batches — exactly-once at the token level.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.errors import BatchTimeout
+from repro.data.packing import GlobalBatchPacker, PackedBatch, assemble_grid
+from repro.dataplane.types import Topology, UnsupportedOperation
+from repro.obs.registry import COUNTER, GAUGE, StatsView
+from repro.obs.tracer import trace_span
+
+__all__ = ["FusedTrainLoop", "FusedReport", "StepTiming", "PipelineStats",
+           "ReaderFanInSource", "PackingTokenSource"]
+
+
+class PipelineStats(StatsView):
+    """Registry-backed fused-loop counters (``fused.<instance>.*``)."""
+
+    _FAMILY = "fused"
+    _SPEC = {
+        "steps": COUNTER,           # train steps completed
+        "tokens": COUNTER,          # tokens consumed (grid cells, incl. pad)
+        "staged_batches": COUNTER,  # batches staged ahead by the ring
+        "align_rewinds": COUNTER,   # checkpoint alignments that drained it
+        "ring_depth": GAUGE,        # staged batches currently in the ring
+        "data_wait_s": GAUGE,       # cumulative critical-path stall seconds
+        "h2d_s": GAUGE,             # cumulative critical-path h2d seconds
+        "compute_s": GAUGE,         # cumulative step-fn seconds
+    }
+
+
+# ---------------------------------------------------------------------------
+# Token-grid sources
+# ---------------------------------------------------------------------------
+
+class ReaderFanInSource:
+    """Full ``(GB, S)`` grids from one decodable reader per (d, c) position.
+
+    The readers are the session's own (``TrainSession.reader`` /
+    ``session.reader``) — this wrapper only sequences ``next_batch`` calls and
+    ``np.block``s the decoded slices back into packer order, so cursors stay
+    exactly-once under the fused loop's checkpoint alignment.
+    """
+
+    def __init__(self, readers: Sequence, topology: Topology):
+        if not topology.decodable:
+            raise UnsupportedOperation(
+                "ReaderFanInSource needs Topology(global_batch=..., "
+                "seq_len=...) to decode slice payloads")
+        grid: Dict[Tuple[int, int], object] = {}
+        for r in readers:
+            grid[(getattr(r, "dp_rank", 0), getattr(r, "cp_rank", 0))] = r
+        want = {(d, c) for d in range(topology.dp) for c in range(topology.cp)}
+        if set(grid) != want:
+            raise ValueError(f"need one reader per mesh position {sorted(want)}"
+                             f", got {sorted(grid)}")
+        self.topology = topology
+        self.readers = [grid[(d, c)] for d in range(topology.dp)
+                        for c in range(topology.cp)]
+
+    def next_tokens(self, timeout_s: Optional[float] = None) -> np.ndarray:
+        cp = self.topology.cp
+        rows = []
+        for d in range(self.topology.dp):
+            row = []
+            for c in range(cp):
+                b = self.readers[d * cp + c].next_batch(timeout_s=timeout_s)
+                row.append(b.tokens)
+            rows.append(row)
+        return np.block(rows)
+
+    # -- cursor surface (exactly-once alignment) ---------------------------
+    def cursors(self) -> tuple:
+        return tuple(r.checkpoint() for r in self.readers)
+
+    def restore(self, cursors: tuple) -> None:
+        for r, ck in zip(self.readers, cursors):
+            r.restore(ck)
+
+    # -- prefetch passthrough ----------------------------------------------
+    def start_prefetch(self) -> None:
+        for r in self.readers:
+            fn = getattr(r, "start_prefetch", None)
+            if fn:
+                fn()
+
+    def stop_prefetch(self) -> None:
+        for r in self.readers:
+            fn = getattr(r, "stop_prefetch", None)
+            if fn:
+                fn()
+
+
+class PackingTokenSource:
+    """Full grids from a raw token stream, packed off the critical path.
+
+    ``pull(timeout_s)`` returns the next chunk of preprocessed tokens (any
+    shape; raveled) or ``None`` at end-of-stream — e.g. the colocated
+    pipeline's sample indices mapped through a tokenizer. The packer and the
+    ``decode_slice`` round-trip (slice at the run topology, reassemble) run
+    wherever ``next_tokens`` runs — inside the staging thread under the fused
+    loop, which is the "packing never on the critical path" half of the
+    tentpole. At end-of-stream the buffered remainder is flushed padded.
+
+    No cursor surface: ``cursors()`` returns ``None`` and checkpoint
+    alignment over a staged ring is refused (use ``ReaderFanInSource`` and a
+    ``TrainSession`` when exactly-once matters).
+    """
+
+    def __init__(self, pull: Callable[[Optional[float]], Optional[np.ndarray]],
+                 topology: Topology, pad_token: int = 0):
+        if not topology.decodable:
+            raise UnsupportedOperation(
+                "PackingTokenSource needs Topology(global_batch=..., "
+                "seq_len=...) to shape the packed grid")
+        self.topology = topology
+        self.pad_token = pad_token
+        self._pull = pull
+        self._packer = GlobalBatchPacker(topology.global_batch,
+                                         topology.seq_len,
+                                         topology.dp, topology.cp)
+        self._pending: "deque[PackedBatch]" = deque()
+        self._exhausted = False
+        self.last_batch: Optional[PackedBatch] = None
+
+    def next_tokens(self, timeout_s: Optional[float] = None) -> np.ndarray:
+        deadline = None if timeout_s is None \
+            else time.monotonic() + timeout_s
+        while not self._pending:
+            if self._exhausted:
+                raise BatchTimeout("token source exhausted")
+            remaining = None if deadline is None \
+                else max(0.0, deadline - time.monotonic())
+            chunk = self._pull(remaining)
+            if chunk is None:
+                self._exhausted = True
+                tail = self._packer.flush(self.pad_token)
+                if tail is None:
+                    raise BatchTimeout("token source exhausted")
+                self._pending.append(tail)
+                break
+            self._pending.extend(self._packer.add_tokens(np.asarray(chunk)))
+            if deadline is not None and not self._pending \
+                    and time.monotonic() >= deadline:
+                raise BatchTimeout(
+                    f"no full global batch packed within {timeout_s}s "
+                    f"({self._packer.buffered_tokens}/"
+                    f"{self._packer.tokens_per_batch} tokens buffered)")
+        batch = self._pending.popleft()
+        self.last_batch = batch
+        t = self.topology
+        return assemble_grid(batch.slices, t.global_batch, t.seq_len,
+                             t.dp, t.cp)
+
+    def cursors(self):
+        return None
+
+    def restore(self, cursors) -> None:
+        raise UnsupportedOperation(
+            "PackingTokenSource has no replayable cursor")
+
+    def start_prefetch(self) -> None:
+        pass
+
+    def stop_prefetch(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Per-step timing + run report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StepTiming:
+    """Critical-path split of one train step (seconds)."""
+
+    step: int
+    data_wait_s: float   # blocked on the ring / the store
+    h2d_s: float         # host->device transfer on the critical path
+    compute_s: float     # step fn dispatch + device execution (synced)
+    wall_s: float        # whole-step wall clock
+    loss: float
+
+    @property
+    def other_s(self) -> float:
+        """Loop overhead not captured by the three attributed phases."""
+        return max(0.0, self.wall_s
+                   - self.data_wait_s - self.h2d_s - self.compute_s)
+
+
+@dataclass
+class FusedReport:
+    """One ``FusedTrainLoop.run`` outcome: throughput + stall attribution."""
+
+    steps: int
+    tokens: int
+    wall_s: float
+    timings: List[StepTiming] = field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def losses(self) -> List[float]:
+        return [t.loss for t in self.timings]
+
+    def totals(self) -> Dict[str, float]:
+        return {
+            "data_wait_s": sum(t.data_wait_s for t in self.timings),
+            "h2d_s": sum(t.h2d_s for t in self.timings),
+            "compute_s": sum(t.compute_s for t in self.timings),
+            "other_s": sum(t.other_s for t in self.timings),
+            "wall_s": sum(t.wall_s for t in self.timings),
+        }
+
+    def stall_fractions(self) -> Dict[str, float]:
+        """Each phase as a fraction of summed per-step wall clock."""
+        t = self.totals()
+        wall = max(t["wall_s"], 1e-12)
+        return {k[:-2]: v / wall for k, v in t.items() if k != "wall_s"}
+
+    @property
+    def data_wait_frac(self) -> float:
+        return self.stall_fractions()["data_wait"]
+
+    def attribution(self, roofline_step_s: Optional[float] = None
+                    ) -> Dict[str, object]:
+        """Where did the time go, and whose fault is a regression?
+
+        With ``roofline_step_s`` (see ``launch.roofline.ideal_step_s``) the
+        report carries ``compute_vs_roofline`` — measured compute per step
+        over the roofline ideal (1/MFU-shaped). Rising compute_vs_roofline
+        at flat data_wait is a kernel problem; rising data_wait at flat
+        compute_vs_roofline is a data-plane problem.
+        """
+        fr = self.stall_fractions()
+        per_step = {k: v / max(self.steps, 1)
+                    for k, v in self.totals().items()}
+        out: Dict[str, object] = {
+            **fr,
+            "per_step": per_step,
+            "bound": "data-plane"
+            if fr["data_wait"] + fr["h2d"] > fr["compute"] else "compute",
+        }
+        if roofline_step_s:
+            out["roofline_step_s"] = roofline_step_s
+            out["compute_vs_roofline"] = \
+                per_step["compute_s"] / roofline_step_s
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The fused loop
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Staged:
+    """One ring entry: a device-resident batch plus its replay cursor."""
+
+    device_tokens: object
+    host_tokens: np.ndarray
+    cursors: Optional[tuple]   # source cursors BEFORE this batch was fetched
+    fetch_s: float
+    h2d_s: float
+
+
+class FusedTrainLoop:
+    """Run ``train_step(params, opt_state, batch)`` off a token-grid source.
+
+    ``source`` is a ``ReaderFanInSource`` / ``PackingTokenSource`` (anything
+    with ``next_tokens``/``cursors``/``restore``/``start_prefetch``).
+    ``step_fn`` is ``make_train_step(...)`` output, jitted or not. ``depth``
+    is the staging-ring size: 0 = synchronous baseline, >=1 overlaps
+    fetch+pack+h2d of future batches with the current step (2 is classic
+    double buffering).
+    """
+
+    #: staging-thread fetch slice — short so pause/stop are responsive even
+    #: when the stream has gone quiet (each timeout just re-checks control
+    #: flags and retries; readers treat a timed-out fetch as a no-op)
+    _STAGE_POLL_S = 0.25
+
+    def __init__(self, source, step_fn, params, opt_state, *,
+                 topology: Optional[Topology] = None, depth: int = 2,
+                 timeout_s: float = 60.0, instance: str = "loop"):
+        if depth < 0:
+            raise ValueError(f"depth must be >= 0, got {depth}")
+        self.source = source
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.depth = int(depth)
+        self.timeout_s = timeout_s
+        topo = topology or getattr(source, "topology", None)
+        self.tokens_per_batch = (topo.global_batch * topo.seq_len) \
+            if topo is not None and topo.decodable else 0
+        self.consumed = 0          # batches fed to the step fn
+        self.stats = PipelineStats(instance)
+        # ring state, all guarded by one condition
+        self._cond = threading.Condition()
+        self._ring: "deque[_Staged]" = deque()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self._pause = False
+        self._idle = threading.Event()   # staging thread parked (not fetching)
+        self._error: Optional[BaseException] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        """Start the staging ring (no-op at depth 0 or if already running)."""
+        if self.depth == 0 or self._thread is not None:
+            return
+        self.source.start_prefetch()
+        self._stop = False
+        self._idle.clear()
+        self._thread = threading.Thread(target=self._stage_loop, daemon=True,
+                                        name="fused-staging")
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the staging thread; staged-but-unconsumed entries are
+        dropped (their cursors were never committed, so a restart replays
+        them — exactly-once is unaffected)."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self.source.stop_prefetch()
+
+    def __enter__(self) -> "FusedTrainLoop":
+        self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False
+
+    # -- staging thread ------------------------------------------------------
+    def _stage_loop(self) -> None:
+        import jax  # deferred: the thread only exists on jax-capable runs
+        while True:
+            with self._cond:
+                while not self._stop and (self._pause
+                                          or len(self._ring) >= self.depth):
+                    self._idle.set()
+                    self._cond.wait(0.05)
+                if self._stop:
+                    self._idle.set()
+                    return
+                self._idle.clear()
+            try:
+                cursors = self.source.cursors()
+                t0 = time.perf_counter()
+                with trace_span("pipeline.stage.fetch", cat="prefetch"):
+                    tokens = self.source.next_tokens(
+                        timeout_s=self._STAGE_POLL_S)
+                fetch_s = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                with trace_span("pipeline.stage.h2d", cat="h2d"):
+                    dev = jax.device_put(tokens)
+                    jax.block_until_ready(dev)
+                h2d_s = time.perf_counter() - t1
+            except BatchTimeout:
+                continue   # re-check stop/pause, then retry the fetch
+            except BaseException as e:
+                with self._cond:
+                    self._error = e
+                    self._idle.set()
+                    self._cond.notify_all()
+                return
+            with self._cond:
+                self._ring.append(_Staged(dev, tokens, cursors,
+                                          fetch_s, h2d_s))
+                self.stats.staged_batches += 1
+                self.stats.ring_depth = float(len(self._ring))
+                self._cond.notify_all()
+
+    # -- acquiring the next device batch -------------------------------------
+    def _acquire(self) -> Tuple[_Staged, float, float]:
+        """Next staged batch + (data_wait_s, h2d_s) on the critical path."""
+        if self.depth == 0:
+            return self._acquire_sync()
+        with trace_span("pipeline.data_wait", cat="read", step=self.consumed):
+            t0 = time.perf_counter()
+            deadline = t0 + self.timeout_s
+            with self._cond:
+                while not self._ring:
+                    if self._error is not None:
+                        raise self._error
+                    if self._pause:
+                        raise RuntimeError(
+                            "ring paused (aligned_checkpoint in progress) "
+                            "while the trainer asked for a batch")
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        raise BatchTimeout(
+                            f"staging ring empty after {self.timeout_s}s")
+                    self._cond.wait(min(remaining, 0.05))
+                entry = self._ring.popleft()
+                self.stats.ring_depth = float(len(self._ring))
+                self._cond.notify_all()
+            data_wait = time.perf_counter() - t0
+        # the transfer already landed on the staging thread: h2d on the
+        # critical path is zero (that overlap is the point of the ring)
+        return entry, data_wait, 0.0
+
+    def _acquire_sync(self) -> Tuple[_Staged, float, float]:
+        import jax
+        with trace_span("pipeline.data_wait", cat="read", step=self.consumed):
+            t0 = time.perf_counter()
+            tokens = self.source.next_tokens(timeout_s=self.timeout_s)
+            fetch_s = time.perf_counter() - t0
+        with trace_span("pipeline.h2d", cat="h2d", step=self.consumed):
+            t1 = time.perf_counter()
+            dev = jax.device_put(tokens)
+            jax.block_until_ready(dev)
+            h2d_s = time.perf_counter() - t1
+        return _Staged(dev, tokens, None, fetch_s, h2d_s), fetch_s, h2d_s
+
+    # -- training -------------------------------------------------------------
+    def run(self, num_steps: int,
+            on_batch: Optional[Callable[[int, np.ndarray], None]] = None
+            ) -> FusedReport:
+        """Train ``num_steps`` steps; returns the throughput report.
+
+        ``on_batch(step, host_tokens)`` observes every consumed grid (tests
+        use it to assert byte-identical replay). Call ``start()`` first or
+        use the loop as a context manager; ``run`` may be called repeatedly
+        — state (params, opt, cursor position) carries across calls.
+        """
+        self.start()
+        timings: List[StepTiming] = []
+        tokens_total = 0
+        t_run0 = time.perf_counter()
+        for _ in range(num_steps):
+            t0 = time.perf_counter()
+            entry, data_wait_s, h2d_s = self._acquire()
+            with trace_span("pipeline.compute", cat="compute",
+                            step=self.consumed):
+                tc = time.perf_counter()
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state,
+                    {"tokens": entry.device_tokens})
+                loss = float(metrics["loss"])   # forces device sync
+                compute_s = time.perf_counter() - tc
+            if on_batch is not None:
+                on_batch(self.consumed, entry.host_tokens)
+            wall_s = time.perf_counter() - t0
+            timings.append(StepTiming(self.consumed, data_wait_s, h2d_s,
+                                      compute_s, wall_s, loss))
+            self.consumed += 1
+            tokens_total += int(entry.host_tokens.size)
+            self.stats.steps += 1
+            self.stats.tokens += int(entry.host_tokens.size)
+            self.stats.data_wait_s += data_wait_s
+            self.stats.h2d_s += h2d_s
+            self.stats.compute_s += compute_s
+        return FusedReport(steps=num_steps, tokens=tokens_total,
+                           wall_s=time.perf_counter() - t_run0,
+                           timings=timings)
+
+    # -- checkpoint alignment --------------------------------------------------
+    def align(self) -> None:
+        """Park the ring and rewind the source to the consumed frontier.
+
+        After this returns, the source's cursors name exactly the first
+        batch the trainer has *not* consumed — the state an aligned
+        checkpoint must bind. Staged entries are dropped; the paused thread
+        re-fetches them after ``resume_staging`` (byte-identical: the data
+        plane is immutable).
+        """
+        if self.depth == 0 or self._thread is None:
+            return
+        with self._cond:
+            self._pause = True
+            self._cond.notify_all()
+        while not self._idle.wait(timeout=1.0):
+            with self._cond:
+                if self._error is not None:
+                    raise self._error
+        with self._cond:
+            if self._error is not None:
+                raise self._error
+            entries = list(self._ring)
+            self._ring.clear()
+            self.stats.ring_depth = 0.0
+        if entries:
+            cursors = entries[0].cursors
+            if cursors is None:
+                raise UnsupportedOperation(
+                    "source is not cursor-restorable: a staged ring cannot "
+                    "be aligned for checkpointing (use ReaderFanInSource)")
+            self.source.restore(cursors)
+            self.stats.align_rewinds += 1
+
+    def resume_staging(self) -> None:
+        with self._cond:
+            self._pause = False
+            self._cond.notify_all()
+
+    def aligned_checkpoint(self, session, state, **kw):
+        """``TrainSession.checkpoint`` at the consumed frontier.
+
+        Parks the ring, rewinds the session's readers to the next
+        unconsumed batch, commits the RunManifest entry, then resumes
+        staging. The committed cursor equals ``self.consumed`` — resuming
+        from it replays the exact token stream the trainer would have seen.
+        """
+        with trace_span("pipeline.align", cat="checkpoint",
+                        step=self.consumed):
+            self.align()
+        try:
+            return session.checkpoint(state, **kw)
+        finally:
+            self.resume_staging()

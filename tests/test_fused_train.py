@@ -1,0 +1,252 @@
+"""Integration tests for the fused train loop (train/pipeline.py).
+
+Covers the tentpole's three claims:
+  * exactly-once at the token level — kill the loop mid-run after an aligned
+    checkpoint, resume via TrainSession, and the packed-batch byte stream and
+    loss trajectory replay identically;
+  * stall attribution is honest — the per-step spans sum to wall clock within
+    tolerance, and a deliberately throttled store (FaultPolicy slow-GETs)
+    shifts the split toward data-wait;
+  * fused packing — PackingTokenSource emits the same grids the packer
+    would, off the critical path.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs.registry import get_smoke_config
+from repro.core import (BatchTimeout, FaultPolicy, FaultyObjectStore,
+                        MemoryObjectStore)
+from repro.dataplane import Topology, open_dataplane
+from repro.dataplane.types import UnsupportedOperation
+from repro.models import init_params, param_specs
+from repro.obs.tracer import disable_tracing, enable_tracing
+from repro.run.session import TrainSession
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.pipeline import (FusedTrainLoop, PackingTokenSource,
+                                  ReaderFanInSource)
+from repro.train.step import StepConfig, make_train_step
+
+TOPO = Topology(dp=2, cp=1, global_batch=4, seq_len=32)
+
+
+@pytest.fixture(scope="module")
+def tiny_step():
+    """One jitted smoke-size train step shared by every test (one compile)."""
+    cfg = get_smoke_config("granite_8b")
+    step_fn = jax.jit(make_train_step(cfg, OptimizerConfig(), StepConfig()))
+    params = init_params(param_specs(cfg), seed=0)
+    opt = init_opt_state(params)
+    return cfg, step_fn, params, opt
+
+
+def _token_stream(n_batches: int, vocab: int) -> np.ndarray:
+    n = n_batches * TOPO.global_batch * TOPO.seq_len
+    return ((np.arange(n) * 7 + 3) % vocab).astype(np.int32)
+
+
+def _produce(session, n_batches: int, vocab: int) -> None:
+    with session.writer("w0") as w:
+        w.write_tokens(_token_stream(n_batches, vocab))
+
+
+def _fan_in(session, **reader_opts) -> ReaderFanInSource:
+    readers = [session.reader(dp_rank=d, **reader_opts)
+               for d in range(TOPO.dp)]
+    return ReaderFanInSource(readers, TOPO)
+
+
+# ---------------------------------------------------------------------------
+# exactly-once kill-and-resume
+# ---------------------------------------------------------------------------
+
+def test_kill_and_resume_replays_identical_batches_and_losses(tiny_step):
+    cfg, step_fn, params, opt = tiny_step
+    ns = "runs/fused_resume"
+
+    # golden: 10 uninterrupted steps
+    store_a = MemoryObjectStore()
+    sess_a = TrainSession(store_a, TOPO, namespace=ns)
+    _produce(sess_a, 12, cfg.vocab_size)
+    golden_batches, golden_losses = [], []
+    with FusedTrainLoop(_fan_in(sess_a), step_fn, params, opt,
+                        topology=TOPO, depth=2, timeout_s=30.0) as loop:
+        rep = loop.run(10, on_batch=lambda s, t: golden_batches.append(
+            t.tobytes()))
+    golden_losses = rep.losses
+    sess_a.close()
+
+    # run B: 4 steps, aligned checkpoint, then die with the ring staged ahead
+    store_b = MemoryObjectStore()
+    sess_b = TrainSession(store_b, TOPO, namespace=ns)
+    _produce(sess_b, 12, cfg.vocab_size)
+    b_batches = []
+    loop_b = FusedTrainLoop(_fan_in(sess_b), step_fn, params, opt,
+                            topology=TOPO, depth=2, timeout_s=30.0)
+    with loop_b:
+        rep_b = loop_b.run(4, on_batch=lambda s, t: b_batches.append(
+            t.tobytes()))
+        entry = loop_b.aligned_checkpoint(
+            sess_b, {"params": loop_b.params, "opt": loop_b.opt_state})
+    assert entry.step == 4      # bound at the consumed frontier, not the ring
+    sess_b.close()              # crash: staged-but-unconsumed batches lost
+
+    # resume: same namespace, fresh process state
+    sess_c = TrainSession.resume(store_b, ns)
+    assert sess_c.resume_step == 4
+    state = sess_c.restore_model({"params": params, "opt": opt})
+    loop_c = FusedTrainLoop(_fan_in(sess_c), step_fn,
+                            state["params"], state["opt"],
+                            topology=TOPO, depth=2, timeout_s=30.0)
+    with loop_c:
+        rep_c = loop_c.run(6, on_batch=lambda s, t: b_batches.append(
+            t.tobytes()))
+    sess_c.close()
+
+    # byte-identical packed batches across the kill: exactly-once at the
+    # token level, not just the TGB level
+    assert b_batches == golden_batches
+    np.testing.assert_allclose(rep_b.losses + rep_c.losses, golden_losses,
+                               rtol=1e-6)
+
+
+def test_fused_loop_over_mixed_streams_aligns_composite_cursors(tiny_step):
+    """MixedReader under the ring: align/rewind must round-trip the
+    composite (per-stream <V, S> + mix position) cursor."""
+    cfg, step_fn, params, opt = tiny_step
+    ns = "runs/fused_mixed"
+    streams = {"web": 0.5, "code": 0.5}
+
+    def fresh(store):
+        return TrainSession(store, TOPO, namespace=ns, streams=streams)
+
+    store = MemoryObjectStore()
+    sess = fresh(store)
+    for name in streams:
+        with sess.writer("w0", stream=name) as w:
+            w.write_tokens(_token_stream(8, cfg.vocab_size))
+
+    batches = []
+    loop = FusedTrainLoop(_fan_in(sess), step_fn, params, opt,
+                          topology=TOPO, depth=2, timeout_s=30.0)
+    with loop:
+        loop.run(3, on_batch=lambda s, t: batches.append(t.tobytes()))
+        entry = loop.aligned_checkpoint(
+            sess, {"params": loop.params, "opt": loop.opt_state})
+        loop.run(3, on_batch=lambda s, t: batches.append(t.tobytes()))
+    assert entry.step == 3
+    sess.close()
+
+    resumed = TrainSession.resume(store, ns)
+    assert resumed.resume_step == 3
+    state = resumed.restore_model({"params": params, "opt": opt})
+    replay = []
+    with FusedTrainLoop(_fan_in(resumed), step_fn, state["params"],
+                        state["opt"], topology=TOPO, depth=2,
+                        timeout_s=30.0) as loop2:
+        loop2.run(3, on_batch=lambda s, t: replay.append(t.tobytes()))
+    resumed.close()
+    assert replay == batches[3:]   # the mixed stream replays byte-identically
+
+
+def test_packing_source_cannot_align_a_staged_ring():
+    src = PackingTokenSource(lambda t: None, TOPO)
+    with pytest.raises(UnsupportedOperation):
+        src.restore(())
+
+
+# ---------------------------------------------------------------------------
+# stall attribution
+# ---------------------------------------------------------------------------
+
+def test_stall_spans_sum_to_wall_clock(tiny_step):
+    cfg, step_fn, params, opt = tiny_step
+    store = MemoryObjectStore()
+    sess = TrainSession(store, TOPO, namespace="runs/fused_spans")
+    _produce(sess, 10, cfg.vocab_size)
+    with FusedTrainLoop(_fan_in(sess), step_fn, params, opt,
+                        topology=TOPO, depth=2, timeout_s=30.0) as loop:
+        loop.run(1)                    # absorb jit compile outside the window
+        tracer = enable_tracing()
+        try:
+            rep = loop.run(6)
+        finally:
+            disable_tracing()
+    sess.close()
+
+    # the three critical-path span families account for each step's wall
+    # clock; only loop bookkeeping (metrics dict, callback dispatch) is
+    # unattributed
+    critical = {"pipeline.data_wait", "pipeline.h2d", "pipeline.compute"}
+    span_total = sum(s.dur for s in tracer.spans() if s.name in critical)
+    wall_total = rep.totals()["wall_s"]
+    assert span_total == pytest.approx(wall_total, rel=0.15)
+    # and the report's own split agrees with its wall clock
+    t = rep.totals()
+    attributed = t["data_wait_s"] + t["h2d_s"] + t["compute_s"] + t["other_s"]
+    assert attributed == pytest.approx(wall_total, rel=1e-6)
+    fr = rep.stall_fractions()
+    assert sum(fr.values()) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_throttled_store_shifts_split_toward_data_wait(tiny_step):
+    cfg, step_fn, params, opt = tiny_step
+
+    def run_arm(store) -> float:
+        sess = open_dataplane(store, TOPO, backend="tgb",
+                              namespace="runs/fused_throttle")
+        with sess.writer("w0") as w:
+            w.write_tokens(_token_stream(10, cfg.vocab_size))
+        src = ReaderFanInSource(
+            [sess.reader(dp_rank=d, prefetch_depth=1) for d in range(2)],
+            TOPO)
+        with FusedTrainLoop(src, step_fn, params, opt, topology=TOPO,
+                            depth=2, timeout_s=30.0) as loop:
+            loop.run(1)                # compile + ring warm
+            rep = loop.run(6)
+        sess.close()
+        return rep.data_wait_frac
+
+    healthy = run_arm(MemoryObjectStore())
+    # brownout-style throttle: every TGB GET eats a 30ms slow-path penalty
+    throttled = run_arm(FaultyObjectStore(MemoryObjectStore(), FaultPolicy(
+        seed=0, slow_get_rate=1.0, slow_get_s=0.03, key_filter="/tgb/")))
+
+    assert throttled > healthy + 0.2, (healthy, throttled)
+    assert throttled > 0.4, throttled
+
+
+# ---------------------------------------------------------------------------
+# fused packing source
+# ---------------------------------------------------------------------------
+
+def test_packing_token_source_matches_direct_packer():
+    chunks = [np.arange(i * 50, i * 50 + 50, dtype=np.int32)
+              for i in range(6)]
+    feed = iter(chunks)
+
+    def pull(timeout_s):
+        return next(feed, None)
+
+    src = PackingTokenSource(pull, TOPO, pad_token=0)
+    grids = []
+    while True:
+        try:
+            grids.append(src.next_tokens(timeout_s=1.0))
+        except BatchTimeout:
+            break
+    total = sum(c.size for c in chunks)
+    gb_tokens = TOPO.global_batch * TOPO.seq_len
+    assert len(grids) == -(-total // gb_tokens)     # ceil: remainder flushed
+    flat = np.concatenate([g.ravel() for g in grids])
+    np.testing.assert_array_equal(flat[:total],
+                                  np.concatenate(chunks))
+    np.testing.assert_array_equal(flat[total:],
+                                  np.zeros(flat.size - total, np.int32))
+    # pad accounting survived the fused path
+    assert src.last_batch.token_count == total - (len(grids) - 1) * gb_tokens

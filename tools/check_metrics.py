@@ -29,6 +29,7 @@ STATS_MODULES = [
     "repro.core.lifecycle",
     "repro.core.resilience",
     "repro.run.session",
+    "repro.train.pipeline",
     "repro.graph.worker",
     "repro.data.mq",
     "repro.serve.engine",
