@@ -106,14 +106,46 @@ class ReaderFanInSource:
                         for c in range(topology.cp)]
 
     def next_tokens(self, timeout_s: Optional[float] = None) -> np.ndarray:
+        """One full grid, transactionally: either every reader advances one
+        step or none does.
+
+        A successful ``next_batch`` moves that reader's cursor immediately, so
+        a timeout on a *later* (d, c) position would otherwise leave earlier
+        readers one step ahead — a retry would then assemble a grid mixing
+        rows from different global steps and silently drop the earlier ranks'
+        current-step slices. On any failure the already-advanced readers are
+        rewound to their entry cursors before the exception propagates, so a
+        retry re-fetches the same global step. ``timeout_s`` is a shared
+        budget for the whole fan-in (one deadline, each reader gets what
+        remains), not a per-reader allowance.
+        """
         cp = self.topology.cp
-        rows = []
-        for d in range(self.topology.dp):
-            row = []
-            for c in range(cp):
-                b = self.readers[d * cp + c].next_batch(timeout_s=timeout_s)
-                row.append(b.tokens)
-            rows.append(row)
+        deadline = None if timeout_s is None \
+            else time.monotonic() + timeout_s
+        snapshots = [r.checkpoint() for r in self.readers]
+        fetched: List = []
+        try:
+            for r in self.readers:
+                remaining = None if deadline is None \
+                    else max(0.0, deadline - time.monotonic())
+                fetched.append(r.next_batch(timeout_s=remaining))
+        except BaseException:
+            for r, ck in zip(self.readers[:len(fetched)], snapshots):
+                r.restore(ck)
+            raise
+        steps = {b.step for b in fetched}
+        if len(steps) > 1:
+            # cursors diverged before this call; rewind to the (equally
+            # divergent but at least self-consistent) entry snapshot and
+            # refuse to hand a torn grid to the trainer
+            for r, ck in zip(self.readers, snapshots):
+                r.restore(ck)
+            raise RuntimeError(
+                f"fan-in readers returned mixed global steps "
+                f"{sorted(steps)}; cursors have diverged — refusing to "
+                f"assemble a grid spanning more than one step")
+        rows = [[fetched[d * cp + c].tokens for c in range(cp)]
+                for d in range(self.topology.dp)]
         return np.block(rows)
 
     # -- cursor surface (exactly-once alignment) ---------------------------
@@ -143,16 +175,28 @@ class PackingTokenSource:
 
     ``pull(timeout_s)`` returns the next chunk of preprocessed tokens (any
     shape; raveled) or ``None`` at end-of-stream — e.g. the colocated
-    pipeline's sample indices mapped through a tokenizer. The packer and the
-    ``decode_slice`` round-trip (slice at the run topology, reassemble) run
-    wherever ``next_tokens`` runs — inside the staging thread under the fused
-    loop, which is the "packing never on the critical path" half of the
+    pipeline's sample indices mapped through a tokenizer. It may instead
+    return a ``(tokens, num_samples)`` tuple to attribute a per-chunk sample
+    count (the bare-array form counts one sample per chunk). A chunk of zero
+    tokens, or a ``BatchTimeout`` raised inside ``pull``, both mean "no data
+    yet" — neither perturbs sample accounting, and the deadline is re-checked
+    before the next attempt. Each individual ``pull`` call is handed at most
+    ``_PULL_POLL_S`` of the remaining budget, so a callable that ignores its
+    timeout argument cannot overrun ``timeout_s`` unbounded. The packer and
+    the ``decode_slice`` round-trip (slice at the run topology, reassemble)
+    run wherever ``next_tokens`` runs — inside the staging thread under the
+    fused loop, which is the "packing never on the critical path" half of the
     tentpole. At end-of-stream the buffered remainder is flushed padded.
 
     No cursor surface: ``cursors()`` returns ``None`` and checkpoint
     alignment over a staged ring is refused (use ``ReaderFanInSource`` and a
     ``TrainSession`` when exactly-once matters).
     """
+
+    #: cap on a single ``pull`` slice — bounds how long one call can hold the
+    #: thread even when the callable ignores its timeout argument, so the
+    #: caller's deadline is honored to within one slice
+    _PULL_POLL_S = 0.25
 
     def __init__(self, pull: Callable[[Optional[float]], Optional[np.ndarray]],
                  topology: Topology, pad_token: int = 0):
@@ -176,9 +220,20 @@ class PackingTokenSource:
         while not self._pending:
             if self._exhausted:
                 raise BatchTimeout("token source exhausted")
-            remaining = None if deadline is None \
-                else max(0.0, deadline - time.monotonic())
-            chunk = self._pull(remaining)
+            if deadline is None:
+                budget = None
+            else:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise BatchTimeout(
+                        f"no full global batch packed within {timeout_s}s "
+                        f"({self._packer.buffered_tokens}/"
+                        f"{self._packer.tokens_per_batch} tokens buffered)")
+                budget = min(remaining, self._PULL_POLL_S)
+            try:
+                chunk = self._pull(budget)
+            except BatchTimeout:
+                continue   # no data within this slice; deadline re-checked
             if chunk is None:
                 self._exhausted = True
                 tail = self._packer.flush(self.pad_token)
@@ -186,13 +241,12 @@ class PackingTokenSource:
                     raise BatchTimeout("token source exhausted")
                 self._pending.append(tail)
                 break
-            self._pending.extend(self._packer.add_tokens(np.asarray(chunk)))
-            if deadline is not None and not self._pending \
-                    and time.monotonic() >= deadline:
-                raise BatchTimeout(
-                    f"no full global batch packed within {timeout_s}s "
-                    f"({self._packer.buffered_tokens}/"
-                    f"{self._packer.tokens_per_batch} tokens buffered)")
+            chunk, samples = chunk if isinstance(chunk, tuple) else (chunk, 1)
+            chunk = np.asarray(chunk)
+            if chunk.size == 0:
+                continue   # "no data yet": an empty chunk completes no sample
+            self._pending.extend(self._packer.add_tokens(chunk,
+                                                         samples=samples))
         batch = self._pending.popleft()
         self.last_batch = batch
         t = self.topology
@@ -360,21 +414,39 @@ class FusedTrainLoop:
             return
         self.source.start_prefetch()
         self._stop = False
+        # a stop()/start() cycle must fully recover: clear a pause left by a
+        # failed alignment and an error from a dead predecessor thread
+        self._pause = False
+        self._error = None
         self._idle.clear()
         self._thread = threading.Thread(target=self._stage_loop, daemon=True,
                                         name="fused-staging")
         self._thread.start()
 
     def stop(self) -> None:
-        """Stop the staging thread; staged-but-unconsumed entries are
-        dropped (their cursors were never committed, so a restart replays
-        them — exactly-once is unaffected)."""
+        """Stop the staging thread and drop staged-but-unconsumed entries,
+        rewinding the source to the consumed frontier first.
+
+        The rewind (to the oldest staged entry's pre-fetch cursors) is what
+        makes "dropped" safe: after ``stop`` the source's cursors name
+        exactly the next batch the trainer has not consumed, so a checkpoint
+        taken afterwards — or a plain restart — replays the dropped entries
+        instead of silently skipping them. A non-restorable source (no
+        cursors) keeps its staged entries in the ring instead, so no data is
+        lost; they are consumed first if the loop is started again."""
         with self._cond:
             self._stop = True
             self._cond.notify_all()
         if self._thread is not None:
             self._thread.join(timeout=10.0)
             self._thread = None
+        with self._cond:
+            entries = list(self._ring)
+        if entries and entries[0].cursors is not None:
+            self.source.restore(entries[0].cursors)
+            with self._cond:
+                self._ring.clear()
+                self.stats.ring_depth = 0.0
         self.source.stop_prefetch()
 
     def __enter__(self) -> "FusedTrainLoop":
@@ -519,24 +591,32 @@ class FusedTrainLoop:
         re-fetches them after ``resume_staging`` (byte-identical: the data
         plane is immutable).
         """
-        if self.depth == 0 or self._thread is None:
-            return
-        with self._cond:
-            self._pause = True
-            self._cond.notify_all()
-        while not self._idle.wait(timeout=1.0):
+        if self._thread is not None:
             with self._cond:
-                if self._error is not None:
-                    raise self._error
+                self._pause = True
+                self._cond.notify_all()
+            while not self._idle.wait(timeout=1.0):
+                with self._cond:
+                    if self._error is not None:
+                        raise self._error
         with self._cond:
             if self._error is not None:
                 raise self._error
+            # drain whatever is staged even when the thread is gone (stopped
+            # loop, depth 0 never stages) — alignment is about ring contents,
+            # not thread liveness
             entries = list(self._ring)
             self._ring.clear()
             self.stats.ring_depth = 0.0
         if entries:
             cursors = entries[0].cursors
             if cursors is None:
+                # non-restorable source: its staged tokens cannot be
+                # re-fetched, so put them back untouched before refusing —
+                # the loop keeps training through them after resume
+                with self._cond:
+                    self._ring.extendleft(reversed(entries))
+                    self.stats.ring_depth = float(len(self._ring))
                 raise UnsupportedOperation(
                     "source is not cursor-restorable: a staged ring cannot "
                     "be aligned for checkpointing (use ReaderFanInSource)")
@@ -556,10 +636,13 @@ class FusedTrainLoop:
         staging. The committed cursor equals ``self.consumed`` — resuming
         from it replays the exact token stream the trainer would have seen.
         """
-        with trace_span("pipeline.align", cat="checkpoint",
-                        step=self.consumed):
-            self.align()
         try:
+            with trace_span("pipeline.align", cat="checkpoint",
+                            step=self.consumed):
+                self.align()
             return session.checkpoint(state, **kw)
         finally:
+            # guaranteed even when align() itself raises (non-restorable
+            # source, propagated staging error) — a parked thread must never
+            # outlive the alignment attempt
             self.resume_staging()

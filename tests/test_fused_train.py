@@ -13,6 +13,7 @@ Covers the tentpole's three claims:
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -23,7 +24,7 @@ from repro.configs.registry import get_smoke_config
 from repro.core import (BatchTimeout, FaultPolicy, FaultyObjectStore,
                         MemoryObjectStore)
 from repro.dataplane import Topology, open_dataplane
-from repro.dataplane.types import UnsupportedOperation
+from repro.dataplane.types import Batch, UnsupportedOperation
 from repro.models import init_params, param_specs
 from repro.obs.tracer import disable_tracing, enable_tracing
 from repro.run.session import TrainSession
@@ -250,3 +251,168 @@ def test_packing_token_source_matches_direct_packer():
                                   np.zeros(flat.size - total, np.int32))
     # pad accounting survived the fused path
     assert src.last_batch.token_count == total - (len(grids) - 1) * gb_tokens
+
+
+def test_packing_source_deadline_holds_when_pull_ignores_budget():
+    """A pull that never yields data (and ignores its timeout argument) must
+    not let next_tokens overrun timeout_s; empty chunks mean 'no data yet'."""
+    src = PackingTokenSource(lambda t: np.empty(0, np.int32), TOPO)
+    t0 = time.monotonic()
+    with pytest.raises(BatchTimeout):
+        src.next_tokens(timeout_s=0.3)
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_packing_source_tolerates_pull_timeouts_and_counts_samples():
+    """In-pull BatchTimeouts and empty chunks are 'no data yet' (no sample
+    charged); (tokens, n) tuples attribute per-chunk sample counts."""
+    half = TOPO.global_batch * TOPO.seq_len // 2
+    events = [BatchTimeout("not yet"),
+              (np.arange(half, dtype=np.int32), 3),
+              np.empty(0, np.int32),
+              (np.arange(half, dtype=np.int32), 2)]
+    feed = iter(events)
+
+    def pull(timeout_s):
+        ev = next(feed)
+        if isinstance(ev, BaseException):
+            raise ev
+        return ev
+
+    src = PackingTokenSource(pull, TOPO)
+    grid = src.next_tokens(timeout_s=5.0)
+    assert grid.shape == (TOPO.global_batch, TOPO.seq_len)
+    # 3 + 2 from the two real chunks; the empty chunk and the in-pull
+    # timeout charged nothing (the old default charged 1 per chunk)
+    assert src.last_batch.num_samples == 5
+
+
+# ---------------------------------------------------------------------------
+# fan-in transactionality (torn-grid regression)
+# ---------------------------------------------------------------------------
+
+class _ScriptedReader:
+    """Minimal BatchReader: deterministic grids, scriptable timeouts."""
+
+    def __init__(self, dp_rank: int, fail_calls=()):
+        self.dp_rank, self.cp_rank = dp_rank, 0
+        self.step = 0
+        self.calls = 0
+        self.timeouts_seen = []
+        self.fail_calls = set(fail_calls)
+
+    def grid(self, step: int) -> np.ndarray:
+        base = step * 1000 + self.dp_rank * 100
+        n = TOPO.global_batch // TOPO.dp * TOPO.seq_len
+        return np.arange(base, base + n, dtype=np.int32).reshape(
+            TOPO.global_batch // TOPO.dp, TOPO.seq_len)
+
+    def next_batch(self, timeout_s=None) -> Batch:
+        self.calls += 1
+        self.timeouts_seen.append(timeout_s)
+        if self.calls in self.fail_calls:
+            raise BatchTimeout("scripted timeout")
+        b = Batch(payload=b"", step=self.step, version=0,
+                  dp_rank=self.dp_rank, cp_rank=0, array=self.grid(self.step))
+        self.step += 1
+        return b
+
+    def checkpoint(self) -> int:
+        return self.step
+
+    def restore(self, ck: int) -> None:
+        self.step = ck
+
+
+def test_fan_in_rewinds_advanced_readers_on_partial_timeout():
+    """If reader (1,0) times out after (0,0) already advanced, the fan-in
+    must rewind (0,0) so the retry re-fetches the same global step —
+    otherwise the retried grid would tear across steps."""
+    r0, r1 = _ScriptedReader(0), _ScriptedReader(1, fail_calls={1})
+    src = ReaderFanInSource([r0, r1], TOPO)
+    with pytest.raises(BatchTimeout):
+        src.next_tokens(timeout_s=0.1)
+    assert r0.step == 0                      # rewound, not left at 1
+    grid = src.next_tokens(timeout_s=1.0)    # retry: both rows from step 0
+    np.testing.assert_array_equal(grid[:2], r0.grid(0))
+    np.testing.assert_array_equal(grid[2:], r1.grid(0))
+
+
+def test_fan_in_refuses_mixed_step_grids():
+    r0, r1 = _ScriptedReader(0), _ScriptedReader(1)
+    r0.step = 1                              # simulate diverged cursors
+    src = ReaderFanInSource([r0, r1], TOPO)
+    with pytest.raises(RuntimeError, match="mixed global steps"):
+        src.next_tokens(timeout_s=1.0)
+    assert (r0.step, r1.step) == (1, 0)      # entry snapshot restored
+
+
+def test_fan_in_shares_one_timeout_budget():
+    """timeout_s bounds the whole fan-in: a slow early reader eats into the
+    budget the later readers see (not dp*cp independent allowances)."""
+
+    class _Slow(_ScriptedReader):
+        def next_batch(self, timeout_s=None):
+            time.sleep(0.05)
+            return super().next_batch(timeout_s)
+
+    r0, r1 = _Slow(0), _ScriptedReader(1)
+    src = ReaderFanInSource([r0, r1], TOPO)
+    src.next_tokens(timeout_s=0.25)
+    assert r1.timeouts_seen[0] <= 0.22
+
+
+# ---------------------------------------------------------------------------
+# ring lifecycle vs exactly-once
+# ---------------------------------------------------------------------------
+
+def _wait_for_staged(loop, deadline_s: float = 10.0) -> None:
+    deadline = time.monotonic() + deadline_s
+    while True:
+        with loop._cond:
+            if loop._ring:
+                return
+        assert time.monotonic() < deadline, "staging ring never filled"
+        time.sleep(0.01)
+
+
+def test_stop_rewinds_cursors_to_consumed_frontier(tiny_step):
+    """stop() with staged-but-unconsumed entries must leave the source at
+    the consumed frontier, so a checkpoint taken after stop() replays the
+    dropped entries instead of skipping them."""
+    cfg, step_fn, params, opt = tiny_step
+    store = MemoryObjectStore()
+    sess = TrainSession(store, TOPO, namespace="runs/fused_stop")
+    _produce(sess, 10, cfg.vocab_size)
+    src = _fan_in(sess)
+    loop = FusedTrainLoop(src, step_fn, params, opt, topology=TOPO,
+                          depth=2, timeout_s=30.0)
+    with loop:
+        loop.run(3)
+        _wait_for_staged(loop)    # the ring is ahead of the trainer
+    # context exit ran stop(): cursors back at the consumed frontier
+    for ck in src.cursors():
+        assert ck.step == 3
+    entry = loop.aligned_checkpoint(
+        sess, {"params": loop.params, "opt": loop.opt_state})
+    assert entry.step == 3        # not 3 + staged
+    sess.close()
+
+
+def test_failed_alignment_does_not_wedge_the_loop(tiny_step):
+    """aligned_checkpoint over a non-restorable source refuses — but must
+    resume staging and keep the staged tokens, not park the loop forever."""
+    cfg, step_fn, params, opt = tiny_step
+    chunks = iter(np.array_split(_token_stream(8, cfg.vocab_size), 16))
+    src = PackingTokenSource(lambda t: next(chunks, None), TOPO)
+    loop = FusedTrainLoop(src, step_fn, params, opt, topology=TOPO,
+                          depth=2, timeout_s=30.0)
+    with loop:
+        loop.run(1)
+        _wait_for_staged(loop)
+        with pytest.raises(UnsupportedOperation):
+            loop.aligned_checkpoint(object(), {})
+        assert loop._pause is False          # staging resumed
+        with loop._cond:
+            assert loop._ring                # staged tokens not lost
+        assert loop.run(2).steps == 2        # loop keeps training
