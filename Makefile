@@ -12,13 +12,13 @@ test-fast:
 		tests/test_consumer.py tests/test_manifest_commit.py tests/test_dac.py
 
 bench-smoke:
-	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10,fig11,fig12,fig13,fig14,fig15,fig16,fig17
+	$(PYTHON) benchmarks/run.py --only fig1,fig7,fig8,fig9,fig10,fig11,fig12,fig13,fig14,fig15,fig16,fig17,fig18
 
 chaos:
 	$(PYTHON) -m repro.chaos
 
 chaos-smoke:
-	$(PYTHON) -m repro.chaos --trace chaos-trace.json --only producer_precommit_kill,trainer_midcheckpoint_kill,derive_worker_midpublish_kill,producer_kill_obs_postmortem,brownout_throttle_storm,store_outage_resume
+	$(PYTHON) -m repro.chaos --trace chaos-trace.json --only producer_precommit_kill,trainer_midcheckpoint_kill,derive_worker_midpublish_kill,producer_kill_obs_postmortem,brownout_throttle_storm,store_outage_resume,shard_conflict_storm,compactor_midfold_kill
 
 bench-full:
 	$(PYTHON) benchmarks/run.py --full

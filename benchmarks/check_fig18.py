@@ -1,0 +1,118 @@
+"""CI gate for fig18: fail if sharded manifest chains stop scaling commits.
+
+Usage: python benchmarks/check_fig18.py bench-smoke.csv
+
+Checks (from the sharded-chain acceptance criteria):
+  * aggregate commit throughput at 128 producers scales >= 3x from 1 shard
+    to 16 shards — the point of sharding the chain;
+  * sharding relieves contention: the 16-shard/128-producer conflict rate
+    is below the single-chain/128-producer one;
+  * consumer poll latency stays flat as history grows (late-in-history poll
+    within 2.5x of early, per configuration) — the merged read view must be
+    O(new commits), never O(history);
+  * the sharded merged view is not much slower to poll warm than the single
+    chain (late-poll within 8x at equal producer count: K head-gallops vs
+    one, fanned out on the probe pool).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from typing import Dict
+
+GATE_SCALING = 3.0
+GATE_POLL_FLAT = 2.5
+GATE_POLL_SHARDED = 8.0
+
+
+def parse(path: str) -> Dict[str, Dict[str, float]]:
+    rows: Dict[str, Dict[str, float]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line.startswith("fig18/"):
+                continue
+            name, _us, derived = line.split(",", 2)
+            fields = {}
+            for kv in derived.split(";"):
+                if "=" not in kv:
+                    continue
+                k, v = kv.split("=", 1)
+                m = re.match(r"-?\d+(\.\d+)?", v)
+                if m:
+                    fields[k] = float(m.group(0))
+            rows[name] = fields
+    return rows
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench-smoke.csv"
+    rows = parse(path)
+    if not rows:
+        print(f"check_fig18: no fig18 rows found in {path}", file=sys.stderr)
+        return 2
+    failures = []
+
+    def arm(shards: int, producers: int) -> Dict[str, float]:
+        return rows.get(f"fig18/commit/s{shards}/p{producers}", {})
+
+    base = arm(1, 128)
+    wide = arm(16, 128)
+    if not base or not wide:
+        print("check_fig18: gate arms s1/p128 and s16/p128 missing "
+              f"from {path}", file=sys.stderr)
+        return 2
+
+    # the headline scaling gate
+    tput_1 = base.get("commit_tps", 0.0)
+    tput_16 = wide.get("commit_tps", 0.0)
+    if tput_1 <= 0:
+        failures.append("single-chain baseline committed nothing")
+    elif tput_16 < GATE_SCALING * tput_1:
+        failures.append(
+            f"16-shard commit throughput {tput_16:.0f}/s < "
+            f"{GATE_SCALING:.0f}x single-chain {tput_1:.0f}/s at 128 "
+            f"producers (sharding is not scaling the commit path)")
+
+    # sharding must relieve conditional-put contention, not just add chains
+    if wide.get("conflict_rate", 1.0) >= base.get("conflict_rate", 0.0):
+        failures.append(
+            f"16-shard conflict rate {wide.get('conflict_rate', 1):.3f} not "
+            f"below single-chain {base.get('conflict_rate', 0):.3f} at 128 "
+            f"producers (DAC shard choice is not spreading load)")
+
+    # poll latency flat vs history, for every measured configuration
+    for name, r in sorted(rows.items()):
+        early, late = r.get("poll_early_ms", 0.0), r.get("poll_late_ms", 0.0)
+        if early <= 0 or late <= 0:
+            failures.append(f"{name}: missing poll latency columns")
+        elif late > GATE_POLL_FLAT * max(early, 1.0):
+            failures.append(
+                f"{name}: warm poll grew with history "
+                f"({early:.1f}ms early -> {late:.1f}ms late, > "
+                f"{GATE_POLL_FLAT}x): merged decode is no longer O(new)")
+
+    # merged-view polls must stay in the same class as single-chain polls
+    late_1 = base.get("poll_late_ms", 0.0)
+    late_16 = wide.get("poll_late_ms", 0.0)
+    if late_1 > 0 and late_16 > GATE_POLL_SHARDED * max(late_1, 1.0):
+        failures.append(
+            f"16-shard warm poll {late_16:.1f}ms > {GATE_POLL_SHARDED}x "
+            f"single-chain {late_1:.1f}ms (shard probe fan-out regressed)")
+
+    if failures:
+        print("check_fig18: sharded commit plane regressed:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"check_fig18: OK ({len(rows)} fig18 rows, 128-producer scaling "
+          f"{tput_16 / max(tput_1, 1e-9):.2f}x [{tput_1:.0f} -> "
+          f"{tput_16:.0f} commits/s], conflict rate "
+          f"{base.get('conflict_rate', 0):.2f} -> "
+          f"{wide.get('conflict_rate', 0):.2f}, 16-shard warm poll "
+          f"{late_16:.1f}ms)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,112 @@
+"""Fig. 18 — sharded manifest chains: commit throughput vs shard count.
+
+Sweeps {1, 4, 16} shard chains x {8, 32, 128} concurrent producers (quick
+profile: the CI-gated corners), all force-committing tiny TGBs against the
+simulated S3-class latency model. With one chain, every producer funnels
+through a single conditional-put hotspot: aggregate commit throughput
+plateaus at ~1/put-latency regardless of pool size and the conflict rate
+climbs with it. With K chains and DAC shard choice, the hotspot splits K
+ways.
+
+Each arm also measures consumer poll latency against the merged view early
+and late in the run: incremental per-shard decode + stable-frontier merge
+must keep polls O(new commits), i.e. flat as history grows — that is the
+read-path half of the fig18 acceptance gate (``check_fig18.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+from benchmarks.common import Row, bench_clock, bench_store, percentile
+from repro.core import (Consumer, MeshPosition, Namespace, Producer,
+                        open_manifest_store, write_shard_config)
+from repro.core.dac import DACConfig, DACPolicy
+
+DURATION_MODEL_S = 5.0   # per (shards, producers) measurement window
+PAYLOAD = 2_000          # tiny TGBs: the commit path is what is measured
+POLLS = 24               # poll-latency samples per phase (early / late)
+
+
+def _poll_p50_ms(cons: Consumer, clock) -> float:
+    lat = []
+    for _ in range(POLLS):
+        t0 = clock.now()
+        cons.poll()
+        lat.append(clock.now() - t0)
+    return percentile(lat, 50) * 1e3
+
+
+def _sweep(n_shards: int, n_producers: int) -> Row:
+    clock = bench_clock()
+    store = bench_store(clock)
+    ns = Namespace(store, "runs/fig18")
+    if n_shards > 1:
+        write_shard_config(ns, n_shards)
+    stop = threading.Event()
+    committed = [0] * n_producers
+    attempts = [0] * n_producers
+    conflicts = [0] * n_producers
+    poll_early = [0.0]
+    poll_late = [0.0]
+
+    def producer_loop(i: int):
+        p = Producer(ns, f"p{i:03d}", dp=1, cp=1,
+                     policy=DACPolicy(DACConfig(eps=0.05, seed=i)))
+        while not stop.is_set():
+            p.write_tgb(uniform_slice_bytes=PAYLOAD)
+            p.maybe_commit(force=True)
+        # no finalize: the row measures steady-state window throughput, and a
+        # benchmark namespace has no consumer waiting on the quiesce flush
+        committed[i] = int(p.stats.tgbs_committed)
+        attempts[i] = int(p.stats.commit_attempts)
+        conflicts[i] = int(p.stats.commit_conflicts)
+
+    def consumer_loop():
+        cons = Consumer(ns, MeshPosition(0, 0, 1, 1), parallel_prefetch=False)
+        clock.sleep(DURATION_MODEL_S * 0.25)
+        poll_early[0] = _poll_p50_ms(cons, clock)
+        while clock.now() - t0 < DURATION_MODEL_S * 0.9:
+            cons.poll()
+            clock.sleep(0.02)
+        poll_late[0] = _poll_p50_ms(cons, clock)
+
+    threads = [threading.Thread(target=producer_loop, args=(i,), daemon=True)
+               for i in range(n_producers)]
+    threads.append(threading.Thread(target=consumer_loop, daemon=True))
+    t0 = clock.now()
+    for t in threads:
+        t.start()
+    while clock.now() - t0 < DURATION_MODEL_S:
+        time.sleep(0.05)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+    elapsed = clock.now() - t0
+
+    total = sum(committed)
+    n_att = sum(attempts)
+    n_conf = sum(conflicts)
+    # visibility sanity: the merged view must be loadable and non-trivially
+    # populated (the stable frontier lags the per-shard heads, so this is a
+    # lower bound on the committed count, not an equality)
+    m = open_manifest_store(Namespace(store, "runs/fig18"))
+    visible = m.load_view(m.latest_version()).total_steps
+    return Row(
+        f"fig18/commit/s{n_shards}/p{n_producers}",
+        elapsed / max(1, total) * 1e6,
+        f"commit_tps={total / elapsed:.1f};"
+        f"conflict_rate={n_conf / max(1, n_att):.3f};"
+        f"poll_early_ms={poll_early[0]:.2f};"
+        f"poll_late_ms={poll_late[0]:.2f};"
+        f"visible_steps={visible};producers={n_producers};shards={n_shards}")
+
+
+def run(quick: bool = True) -> List[Row]:
+    grid = ([(1, 8), (1, 128), (4, 32), (16, 128)] if quick else
+            [(s, p) for s in (1, 4, 16) for p in (8, 32, 128)])
+    out = []
+    for n_shards, n_producers in grid:
+        out.append(_sweep(n_shards, n_producers))
+    return out

@@ -25,6 +25,7 @@ FIGS = [
     ("fig15", "benchmarks.fig15_derived_streams"),
     ("fig16", "benchmarks.fig16_brownout"),
     ("fig17", "benchmarks.fig17_fused_train"),
+    ("fig18", "benchmarks.fig18_sharded_commit"),
 ]
 
 

@@ -25,7 +25,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import (Consumer, FaultInjector, ManifestStore,
-                        MemoryObjectStore, MeshPosition, Namespace, Producer)
+                        MemoryObjectStore, MeshPosition, Namespace, Producer,
+                        open_manifest_store)
 from repro.ops import fsck
 
 __all__ = ["SCENARIOS", "ScenarioResult", "scenario", "run_scenario",
@@ -180,7 +181,7 @@ def now() -> float:
 
 
 def latest_view(ns: Namespace):
-    m = ManifestStore(ns)
+    m = open_manifest_store(ns)
     return m.load_view(m.latest_version())
 
 

@@ -20,7 +20,8 @@ Public surface:
                            RetryBudgetExhausted)
 """
 from repro.core.clock import Clock, SystemClock, VirtualClock
-from repro.core.commit import CommitProtocol, CommitResult
+from repro.core.commit import (CommitProtocol, CommitResult,
+                               ShardStats, ShardedCommitProtocol)
 from repro.core.errors import (BatchTimeout, CircuitOpenError,
                                RetryBudgetExhausted, ThrottledError,
                                TransientStoreError, backoff_delays,
@@ -32,13 +33,17 @@ from repro.core.faults import (BrownoutPhase, FaultPolicy, FaultStats,
                                FaultyObjectStore)
 from repro.core.dac import (AIMDPolicy, CommitPolicy, DACConfig, DACPolicy,
                             FixedCountPolicy, IncrPolicy, NaivePolicy,
-                            make_policy)
+                            ShardChooser, make_policy)
 from repro.core.lifecycle import (Reclaimer, Watermark, global_watermark,
                                   read_trim_marker, read_watermarks,
                                   write_watermark)
-from repro.core.manifest import (DatasetView, ManifestStore, ProducerState,
+from repro.core.compactor import CompactStats, Compactor
+from repro.core.manifest import (CompactSegment, DatasetView, ManifestStore,
+                                 MergedDatasetView, ProducerState,
+                                 SegmentStore, ShardedManifestStore,
                                  StepUnavailable, MANIFEST_FORMAT_DELTA,
-                                 MANIFEST_FORMAT_FLAT)
+                                 MANIFEST_FORMAT_FLAT, open_manifest_store,
+                                 read_shard_config, write_shard_config)
 from repro.core.objectstore import (ConditionalPutFailed, DEFAULT_COALESCE_GAP,
                                     FaultInjector, FileObjectStore, IOPool,
                                     InjectedCrash, LatencyModel,
@@ -62,7 +67,11 @@ __all__ = [
     "AIMDGovernor", "CircuitBreaker", "HedgePolicy", "ResilienceConfig",
     "ResilientStore", "RetryBudget", "StoreResilienceStats",
     "shared_governor", "wrap_store",
-    "CommitProtocol", "CommitResult",
+    "CommitProtocol", "CommitResult", "ShardStats",
+    "ShardedCommitProtocol", "ShardChooser",
+    "CompactStats", "Compactor", "CompactSegment", "SegmentStore",
+    "MergedDatasetView", "ShardedManifestStore", "open_manifest_store",
+    "read_shard_config", "write_shard_config",
     "Consumer", "ConsumerStats", "MeshPosition", "convert_logical_step",
     "floor_to_data_step", "remap_step",
     "AIMDPolicy", "CommitPolicy", "DACConfig", "DACPolicy", "FixedCountPolicy",

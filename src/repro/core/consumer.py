@@ -26,7 +26,8 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.errors import (BatchTimeout, FAIL_FAST_ERRORS,
                                TransientStoreError, retry_transient)
-from repro.core.manifest import DatasetView, ManifestStore, StepUnavailable
+from repro.core.manifest import (DatasetView, ManifestStore, StepUnavailable,
+                                 open_manifest_store)
 from repro.core.objectstore import IOPool, Namespace, NoSuchKey
 from repro.core.tgb import (SPECULATIVE_TAIL_BYTES, TAIL_BYTES, TGBFooter,
                             TGBFormatError, TGBReader)
@@ -173,7 +174,10 @@ class Consumer:
         self.store = ns.store
         self.clock = self.store.clock
         self.pos = pos
-        self.manifests = manifests or ManifestStore(ns)
+        # default discovers the run's shard layout (``manifest/shards.cfg``):
+        # readers of sharded runs transparently get the merged view
+        self.manifests = manifests if manifests is not None \
+            else open_manifest_store(ns)
         self.view: DatasetView = DatasetView()
         self.step = 0  # next global step S to consume
         self.dense_read = dense_read

@@ -184,3 +184,79 @@ def make_policy(name: str, **kw) -> CommitPolicy:
     if name == "aimd":
         return AIMDPolicy(**{k: v for k, v in kw.items() if k in ("a", "T0", "T_min", "T_max")})
     raise ValueError(f"unknown commit policy {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# DAC shard extension: "which shard to commit to" (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+class ShardChooser:
+    """Extends DAC from *when* to commit to *which shard chain* to commit to.
+
+    Default placement is hash-by-producer (deterministic, coordination-free).
+    The chooser then tracks an EMA of this producer's own conflict outcomes —
+    the same observation stream DAC's cadence uses — and, when the home shard
+    looks persistently hot (EMA above ``conflict_threshold``) and the cooldown
+    has elapsed, proposes a move to the least-loaded shard as measured by the
+    per-shard active-producer counts read from storage. All signals are
+    observed through the manifest chains; producers never talk to each other
+    (paper §5 invariant, extended).
+
+    Hysteresis matters: switching costs a cross-shard offset re-derivation
+    and briefly concentrates contention on the target, so the cooldown and a
+    strict-improvement requirement keep the pool from oscillating.
+    """
+
+    def __init__(self, n_shards: int, producer_id: str,
+                 conflict_threshold: float = 0.5, alpha: float = 0.25,
+                 cooldown: int = 16):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_shards = n_shards
+        self.producer_id = producer_id
+        self.conflict_threshold = conflict_threshold
+        self.alpha = alpha
+        self.cooldown = cooldown
+        # zlib.crc32, not hash(): stable across processes and interpreter runs
+        import zlib
+        self.shard = zlib.crc32(producer_id.encode("utf-8")) % n_shards
+        self.conflict_ema = 0.0
+        self._since_move = 0
+        self._since_probe = 0
+
+    def observe(self, success: bool) -> None:
+        """Feed one commit outcome on the current home shard."""
+        x = 0.0 if success else 1.0
+        self.conflict_ema += self.alpha * (x - self.conflict_ema)
+        self._since_move += 1
+        self._since_probe += 1
+
+    def should_probe(self) -> bool:
+        """Worth paying the K-shard load read to consider moving? The probe
+        cooldown matters as much as the move cooldown: a persistently-hot
+        pool would otherwise re-pay the K refreshes on *every* conflict once
+        the EMA crosses the threshold."""
+        return (self.n_shards > 1
+                and self.conflict_ema > self.conflict_threshold
+                and self._since_move >= self.cooldown
+                and self._since_probe >= self.cooldown)
+
+    def choose(self, shard_loads) -> int:
+        """Pick the target shard given per-shard active-producer counts.
+        Returns the current shard unless a strictly less-loaded one exists;
+        ties among candidates break by lowest index (deterministic)."""
+        self._since_probe = 0
+        loads = list(shard_loads)
+        if len(loads) != self.n_shards:
+            raise ValueError(f"expected {self.n_shards} loads, got {len(loads)}")
+        best = min(range(self.n_shards), key=lambda k: (loads[k], k))
+        # +1: moving there adds us to the target's pool
+        if loads[best] + 1 < loads[self.shard]:
+            return best
+        return self.shard
+
+    def move_to(self, shard: int) -> None:
+        self.shard = shard
+        self.conflict_ema = 0.0
+        self._since_move = 0
+        self._since_probe = 0

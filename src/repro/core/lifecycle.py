@@ -21,7 +21,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import msgpack
 
-from repro.core.manifest import ManifestStore
+from repro.core.manifest import (ManifestStore, ShardedManifestStore,
+                                 open_manifest_store)
 from repro.core.objectstore import Namespace, NoSuchKey
 from repro.obs.registry import COUNTER, StatsView
 
@@ -122,7 +123,10 @@ class Reclaimer:
         self.expected_ranks = expected_ranks
         self.physical_delete = physical_delete
         self.watermark_source = watermark_source
-        self.manifests = manifests or ManifestStore(ns)
+        # resolve the run's shard layout: a sharded run reclaims through the
+        # merged view and per-shard chain GC, a legacy run is unchanged
+        self.manifests = manifests if manifests is not None \
+            else open_manifest_store(ns)
         # telemetry retention rides the data lifecycle: each cycle keeps the
         # newest N flight-recorder snapshots per component (0 = keep all)
         self.obs_keep_snaps = obs_keep_snaps
@@ -184,6 +188,9 @@ class Reclaimer:
                 self.store.delete(key)
                 self.stats.tgbs_deleted += 1
                 self.stats.bytes_reclaimed += nbytes
+        if isinstance(self.manifests, ShardedManifestStore):
+            self._reclaim_sharded_manifests(safe_step)
+            return wg
         # -- physical deletion: manifest versions below W_global.version ---------
         # Delta-format guard: versions >= safe_version may need the chain back
         # to their snapshot; keep everything from the newest snapshot at or
@@ -201,9 +208,18 @@ class Reclaimer:
                     break
                 v -= 1
             delete_below = max(0, v)
-        for mkey in self.store.list(self.ns.key("manifest")):
-            v = int(mkey.rsplit("/", 1)[-1].split(".")[0])
-            if v < delete_below:
+        # direct-children only: a prefix list of manifest/ on a run that was
+        # ever sharded also matches shards.cfg, shard subchains, and compact
+        # segments — none of which belong to this chain's version space
+        prefix = self.ns.key("manifest") + "/"
+        for mkey in self.store.list(prefix):
+            rest = mkey[len(prefix):]
+            if "/" in rest or not rest.endswith(".manifest"):
+                continue
+            stem = rest[: -len(".manifest")]
+            if not stem.isdigit():
+                continue
+            if int(stem) < delete_below:
                 try:
                     nbytes = self.store.head(mkey)
                 except NoSuchKey:
@@ -212,6 +228,59 @@ class Reclaimer:
                 self.stats.manifests_deleted += 1
                 self.stats.bytes_reclaimed += nbytes
         return wg
+
+    def _reclaim_sharded_manifests(self, safe_step: int) -> None:
+        """Sharded-run GC: trim each shard chain back to the newest snapshot
+        at least one snapshot window behind its head (stale warm readers keep
+        an incremental-decode runway), and drop compacted segments wholly
+        below the safe step — except the newest segment, whose cumulative
+        fold counts are the compactor's crash-recovery bookkeeping."""
+        m = self.manifests
+        for shard in m.shards:
+            head = shard.latest_version(hint=-1)
+            horizon = head - shard.snapshot_every
+            if horizon <= 0:
+                continue
+            keep_from = None
+            v = horizon
+            while v >= 0:
+                try:
+                    doc = shard.read_doc(v)
+                except (KeyError, NoSuchKey):
+                    break
+                if "snapshot_tgbs" in doc or doc.get("format") == "flat" \
+                        or doc.get("parent_version", -1) < 0:
+                    keep_from = v
+                    break
+                v -= 1
+            if keep_from is None:
+                continue
+            for ver in shard.list_versions():
+                if ver >= keep_from:
+                    break
+                mkey = shard.manifest_key(ver)
+                try:
+                    nbytes = self.store.head(mkey)
+                except NoSuchKey:
+                    continue
+                self.store.delete(mkey)
+                self.stats.manifests_deleted += 1
+                self.stats.bytes_reclaimed += nbytes
+        seqs = m.segments.seqs()
+        for seq in seqs[:-1]:
+            try:
+                seg = m.segments.read(seq)
+            except NoSuchKey:
+                continue
+            if seg.end_step <= safe_step:
+                skey = m.segments.seg_key(seq)
+                try:
+                    nbytes = self.store.head(skey)
+                except NoSuchKey:
+                    continue
+                self.store.delete(skey)
+                self.stats.manifests_deleted += 1
+                self.stats.bytes_reclaimed += nbytes
 
     # -- background thread --------------------------------------------------------
     def start(self, interval_s: float = 1.0) -> None:

@@ -20,11 +20,12 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Callable, Deque, List, Optional, Tuple
 
-from repro.core.commit import CommitProtocol
+from repro.core.commit import CommitProtocol, ShardedCommitProtocol
 from repro.core.dac import CommitPolicy, DACPolicy
 from repro.core.errors import TransientStoreError, retry_transient
 from repro.core.lifecycle import read_trim_marker
-from repro.core.manifest import ManifestStore
+from repro.core.manifest import (ManifestStore, ShardedManifestStore,
+                                 open_manifest_store)
 from repro.core.objectstore import IOPool, Namespace
 from repro.core.tgb import TGBBuilder, TGBDescriptor, build_uniform_tgb
 from repro.obs.registry import COUNTER, GAUGE, HISTOGRAM, StatsView
@@ -86,8 +87,19 @@ class Producer:
         self.dp = dp
         self.cp = cp
         self.policy = policy or DACPolicy()
-        self.manifests = manifests or ManifestStore(ns)
-        self.protocol = CommitProtocol(self.manifests, producer_id, epoch=epoch)
+        # default resolves the run's shard layout from storage: a sharded run
+        # yields a ShardedManifestStore, a legacy run the byte-identical
+        # single-chain ManifestStore
+        self.manifests = manifests if manifests is not None \
+            else open_manifest_store(ns)
+        # a sharded manifest plane gets the sharded protocol (same surface):
+        # home-shard commits, DAC shard choice, cross-shard exactly-once
+        if isinstance(self.manifests, ShardedManifestStore):
+            self.protocol: CommitProtocol = ShardedCommitProtocol(
+                self.manifests, producer_id, epoch=epoch)
+        else:
+            self.protocol = CommitProtocol(self.manifests, producer_id,
+                                           epoch=epoch)
         self.max_lag = max_lag
         self.stats = ProducerStats(producer_id)
         # optional flight recorder: periodic registry snapshots published to
@@ -357,6 +369,13 @@ class Producer:
             raise RuntimeError(f"{self.producer_id}: finalize failed to drain "
                                f"{len(self.pending)} pending + "
                                f"{len(self._spill)} spilled TGBs")
+        if isinstance(self.protocol, ShardedCommitProtocol):
+            # make everything this producer committed merge-stable: bump every
+            # lagging shard chain up to the global head before exiting
+            try:
+                self.protocol.flush_frontier()
+            except TransientStoreError:
+                pass  # consumers catch up on the next heartbeat/compaction
         if self._recorder is not None:
             self._recorder.close()  # last-word snapshot for post-mortems
 
@@ -366,7 +385,10 @@ class Producer:
         max_lag relative to the trim marker (W_global surrogate)."""
         if self.max_lag is None:
             return False
-        view = self.protocol.view
+        if isinstance(self.protocol, ShardedCommitProtocol):
+            steps = self.protocol.visible_steps()
+        else:
+            steps = self.protocol.view.total_steps
         try:
             trim = read_trim_marker(self.ns)
             self._last_safe_step = trim[0] if trim is not None else 0
@@ -376,7 +398,7 @@ class Producer:
             # pool — with a real trim marker at step N, one 5xx made every
             # producer look max_lag ahead and pause until the next clean read.
             pass
-        ahead = (view.total_steps + len(self.pending)) - self._last_safe_step
+        ahead = (steps + len(self.pending)) - self._last_safe_step
         return ahead >= self.max_lag
 
 

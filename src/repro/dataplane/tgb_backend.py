@@ -21,7 +21,7 @@ from repro.core.consumer import (Consumer, MeshPosition,
                                  convert_logical_step, floor_to_data_step)
 from repro.core.dac import CommitPolicy
 from repro.core.lifecycle import Reclaimer, Watermark, write_watermark
-from repro.core.manifest import ManifestStore
+from repro.core.manifest import ManifestStore, open_manifest_store
 from repro.core.objectstore import IOPool, Namespace, ObjectStore
 from repro.core.producer import Producer
 from repro.core.resilience import wrap_store
@@ -39,11 +39,13 @@ class TGBWriter(PackingWriterMixin):
                  pipeline_commits: bool = False,
                  io_pool: Optional[IOPool] = None,
                  obs_snap_interval_s: Optional[float] = None,
-                 spill_limit: Optional[int] = None):
+                 spill_limit: Optional[int] = None,
+                 manifests: Optional[ManifestStore] = None):
         self.topology = topology
         self.writer_id = writer_id
         self.producer = Producer(ns, writer_id, dp=topology.dp, cp=topology.cp,
-                                 policy=policy, manifests=ManifestStore(ns),
+                                 policy=policy,
+                                 manifests=manifests or open_manifest_store(ns),
                                  max_lag=max_lag,
                                  pipeline_commits=pipeline_commits,
                                  io_pool=io_pool,
@@ -98,10 +100,12 @@ class TGBBatchReader:
                  io_pool: Optional[IOPool] = None,
                  resume: "Checkpoint | str | None" = None,
                  stats_instance: Optional[str] = None,
-                 obs_snap_interval_s: Optional[float] = None):
+                 obs_snap_interval_s: Optional[float] = None,
+                 manifests: Optional[ManifestStore] = None):
         self.topology = topology
         self.consumer = Consumer(
             ns, MeshPosition(dp_rank, cp_rank, topology.dp, topology.cp),
+            manifests=manifests,
             prefetch_depth=prefetch_depth, dense_read=dense_read,
             verify_crc=verify_crc, io_pool=io_pool,
             stats_instance=stats_instance,
@@ -201,7 +205,8 @@ class TGBSession(SessionBase):
                  io_pool: Optional[IOPool] = None,
                  data_topology: Optional[Topology] = None,
                  obs_snap_interval_s: Optional[float] = None,
-                 resilience=None):
+                 resilience=None,
+                 manifest_shards: Optional[int] = None):
         if not isinstance(store, ObjectStore):
             raise TypeError(f"tgb backend needs an ObjectStore target, got "
                             f"{type(store).__name__}")
@@ -229,6 +234,13 @@ class TGBSession(SessionBase):
         # flight-recorder cadence for every client this session vends
         # (None = telemetry snapshots off; the counters still register)
         self._obs_snap_interval_s = obs_snap_interval_s
+        # manifest_shards >= 2 claims a sharded manifest layout at session
+        # creation (conditional put, first writer wins, immutable for the
+        # run's life) so every client vended afterwards discovers it; None
+        # adopts whatever the run already is (legacy single chain included)
+        if manifest_shards is not None and manifest_shards > 1:
+            from repro.core.manifest import write_shard_config
+            write_shard_config(self.ns, manifest_shards)
 
     # -- clients -------------------------------------------------------------
     def writer(self, writer_id: str = "w0", *,
@@ -292,7 +304,7 @@ class TGBSession(SessionBase):
 
     def manifest_view(self):
         """Latest committed DatasetView (introspection/debugging)."""
-        m = ManifestStore(self.ns)
+        m = open_manifest_store(self.ns)
         return m.load_view(m.latest_version())
 
     def close(self) -> None:

@@ -48,7 +48,8 @@ import numpy as np
 
 from repro.core.lifecycle import read_trim_marker, read_watermarks
 from repro.core.manifest import (MANIFEST_FORMAT_FLAT, DatasetView,
-                                 ManifestStore)
+                                 ManifestStore, ShardedManifestStore,
+                                 read_shard_config)
 from repro.core.objectstore import Namespace, NoSuchKey
 from repro.dataplane.types import Checkpoint
 from repro.run.manifest import RunManifestError, RunManifestStore
@@ -114,14 +115,24 @@ def list_streams(ns: Namespace) -> List[str]:
     return sorted(names)
 
 
-def _manifest_versions(ns: Namespace) -> List[int]:
+def _manifest_versions(ns: Namespace, chain: str = "manifest") -> List[int]:
+    """Retained versions of ONE chain, by direct-child listing: a prefix list
+    of ``manifest/`` on a sharded run also matches shard subchains, compacted
+    segments, and ``shards.cfg`` — none of which are this chain's versions."""
+    prefix = ns.key(chain) + "/"
     out = []
-    for key in ns.store.list(ns.key("manifest")):
-        try:
-            out.append(int(key.rsplit("/", 1)[-1].split(".")[0]))
-        except ValueError:
-            pass
+    for key in ns.store.list(prefix):
+        rest = key[len(prefix):]
+        if "/" in rest or not rest.endswith(".manifest"):
+            continue
+        stem = rest[: -len(".manifest")]
+        if stem.isdigit():
+            out.append(int(stem))
     return sorted(out)
+
+
+def _chain_key(ns: Namespace, chain: str, version: int) -> str:
+    return ns.key(chain, f"{version:08d}.manifest")
 
 
 def _parse_tgb_key(ns: Namespace, key: str) -> Optional[Tuple[str, int]]:
@@ -138,29 +149,29 @@ def _parse_tgb_key(ns: Namespace, key: str) -> Optional[Tuple[str, int]]:
     return pid, offset
 
 
-def _check_chain(ns: Namespace, versions: List[int],
-                 report: FsckReport) -> Optional[DatasetView]:
-    """Validate the manifest chain; return the latest view if loadable."""
+def _check_chain(ns: Namespace, versions: List[int], report: FsckReport,
+                 chain: str = "manifest") -> Optional[DatasetView]:
+    """Validate one manifest chain; return the latest view if loadable."""
     store = ns.store
     for prev, cur in zip(versions, versions[1:]):
         if cur != prev + 1:
             report.issues.append(FsckIssue(
-                "error", "torn-manifest-chain", ns.manifest_key(prev + 1),
+                "error", "torn-manifest-chain", _chain_key(ns, chain, prev + 1),
                 f"retained versions jump {prev} -> {cur}: intermediate "
                 f"manifests are missing"))
     docs = {}
     for v in versions:
         try:
-            docs[v] = msgpack.unpackb(store.get(ns.manifest_key(v)), raw=False,
-                                      strict_map_key=False)
+            docs[v] = msgpack.unpackb(store.get(_chain_key(ns, chain, v)),
+                                      raw=False, strict_map_key=False)
             report.checked_manifests += 1
         except (KeyError, NoSuchKey):
             report.issues.append(FsckIssue(
-                "error", "unreadable-manifest", ns.manifest_key(v),
+                "error", "unreadable-manifest", _chain_key(ns, chain, v),
                 "listed but not readable"))
         except Exception as e:  # undecodable payload = torn commit
             report.issues.append(FsckIssue(
-                "error", "corrupt-manifest", ns.manifest_key(v),
+                "error", "corrupt-manifest", _chain_key(ns, chain, v),
                 f"cannot decode: {type(e).__name__}: {e}"))
     if not versions or versions[-1] not in docs:
         return None
@@ -174,24 +185,122 @@ def _check_chain(ns: Namespace, versions: List[int],
             break
         if parent in seen:
             report.issues.append(FsckIssue(
-                "error", "torn-manifest-chain", ns.manifest_key(parent),
+                "error", "torn-manifest-chain", _chain_key(ns, chain, parent),
                 "delta parent cycle"))
             return None
         seen.add(parent)
         if parent not in docs:
             report.issues.append(FsckIssue(
-                "error", "torn-manifest-chain", ns.manifest_key(parent),
+                "error", "torn-manifest-chain", _chain_key(ns, chain, parent),
                 f"delta manifest v{head.get('version')} needs parent "
                 f"v{parent}, which is missing"))
             return None
         head = docs[parent]
     try:
-        return ManifestStore(ns).load_view(versions[-1])
+        return ManifestStore(ns, chain=chain).load_view(versions[-1])
     except Exception as e:
         report.issues.append(FsckIssue(
-            "error", "torn-manifest-chain", ns.manifest_key(versions[-1]),
+            "error", "torn-manifest-chain",
+            _chain_key(ns, chain, versions[-1]),
             f"latest view does not reconstruct: {type(e).__name__}: {e}"))
         return None
+
+
+def _check_sharded(ns: Namespace, n_shards: int,
+                   report: FsckReport) -> Optional[DatasetView]:
+    """Sharded-run audits: every shard chain (torn/corrupt/decodable), the
+    compact-segment chain (sequence gaps, base/end continuity), compaction
+    orphans (a shard base trimmed beyond the folded count is lost data; a
+    base lagging the fold is a repairable compactor crash window), and the
+    merged view's globally-ordered step sequence (duplicate TGBs, regressed
+    per-producer sequences, committed offsets behind observed entries).
+    Returns the merged view, or None if it does not reconstruct."""
+    shard_views: List[Optional[DatasetView]] = []
+    for k in range(n_shards):
+        chain = f"manifest/shard-{k}"
+        versions = _manifest_versions(ns, chain)
+        shard_views.append(_check_chain(ns, versions, report, chain=chain))
+    m = ShardedManifestStore(ns, n_shards)
+    seqs = m.segments.seqs()
+    for prev, cur in zip(seqs, seqs[1:]):
+        if cur != prev + 1:
+            report.issues.append(FsckIssue(
+                "error", "torn-segment-chain", m.segments.seg_key(prev + 1),
+                f"compact segment sequence jumps {prev} -> {cur}"))
+    prev_end: Optional[int] = None
+    latest_folds: Optional[List[int]] = None
+    for seq in seqs:
+        skey = m.segments.seg_key(seq)
+        try:
+            seg = m.segments.read(seq)
+            report.checked_manifests += 1
+        except Exception as e:
+            report.issues.append(FsckIssue(
+                "error", "corrupt-segment", skey,
+                f"cannot decode: {type(e).__name__}: {e}"))
+            prev_end = None
+            continue
+        if prev_end is not None and seg.base_step != prev_end:
+            report.issues.append(FsckIssue(
+                "error", "torn-segment-chain", skey,
+                f"segment base_step {seg.base_step} != previous segment end "
+                f"{prev_end}: folded history has a gap or overlap"))
+        prev_end = seg.end_step
+        latest_folds = list(seg.folds)
+    if latest_folds is not None:
+        for k, v in enumerate(shard_views):
+            if v is None:
+                continue
+            if v.base_step > latest_folds[k]:
+                report.issues.append(FsckIssue(
+                    "error", "compaction-orphan",
+                    _chain_key(ns, f"manifest/shard-{k}", v.version),
+                    f"shard {k} trimmed its base to {v.base_step} but only "
+                    f"{latest_folds[k]} of its entries are folded into "
+                    f"segments: {v.base_step - latest_folds[k]} entries are "
+                    f"unreachable"))
+            elif v.base_step < latest_folds[k]:
+                report.issues.append(FsckIssue(
+                    "warn", "compaction-lagging-trim",
+                    _chain_key(ns, f"manifest/shard-{k}", v.version),
+                    f"shard {k} base {v.base_step} lags its folded count "
+                    f"{latest_folds[k]} (compactor crash window; readers "
+                    f"deduplicate, the next compactor cycle repairs)"))
+    try:
+        mv = m.load_view(m.latest_version())
+    except Exception as e:
+        report.issues.append(FsckIssue(
+            "error", "merge-view-unreconstructable", ns.key("manifest"),
+            f"merged shard view does not reconstruct: "
+            f"{type(e).__name__}: {e}"))
+        return None
+    seen_ids: Dict[str, int] = {}
+    last_seq: Dict[str, int] = {}
+    for i, t in enumerate(mv.tgbs):
+        step = mv.base_step + i
+        if t.tgb_id in seen_ids:
+            report.issues.append(FsckIssue(
+                "error", "step-sequence-duplicate", t.object_key,
+                f"TGB {t.tgb_id} appears at merged steps "
+                f"{seen_ids[t.tgb_id]} and {step}: exactly-once is broken"))
+        seen_ids[t.tgb_id] = step
+        prev = last_seq.get(t.producer_id)
+        if prev is not None and t.producer_seq <= prev:
+            report.issues.append(FsckIssue(
+                "error", "step-sequence-regression", t.object_key,
+                f"producer {t.producer_id!r} sequence regresses "
+                f"{prev} -> {t.producer_seq} at merged step {step}: the "
+                f"global order is not a merge of per-producer streams"))
+        last_seq[t.producer_id] = t.producer_seq
+    for pid, last in last_seq.items():
+        off = mv.producer_offset(pid)
+        if off < last:
+            report.issues.append(FsckIssue(
+                "error", "step-sequence-unaccounted", ns.key("manifest"),
+                f"producer {pid!r} has merged entries through seq {last} but "
+                f"no shard map commits past offset {off}: a replacement "
+                f"producer would re-emit committed work"))
+    return mv
 
 
 def _check_tgbs(ns: Namespace, view: Optional[DatasetView],
@@ -529,11 +638,12 @@ def _check_derive(ns: Namespace, view: Optional[DatasetView],
         for step, t in view.derived_tgbs():
             src_name = t.provenance.get("src_stream", "")
             if src_name not in src_ids:
+                from repro.core.manifest import open_manifest_store
                 sns = parent_ns.stream(src_name)
-                sversions = _manifest_versions(sns)
                 try:
-                    sview = ManifestStore(sns).load_view(sversions[-1]) \
-                        if sversions else None
+                    sm = open_manifest_store(sns)
+                    slatest = sm.latest_version()
+                    sview = sm.load_view(slatest) if slatest >= 0 else None
                 except Exception:
                     sview = None
                 src_ids[src_name] = ({d.tgb_id for d in sview.tgbs}
@@ -584,8 +694,25 @@ def fsck(ns: Namespace, repair: bool = False,
     manifests. Returns the full :class:`FsckReport`.
     """
     report = FsckReport(namespace=ns.prefix)
-    versions = _manifest_versions(ns)
-    view = _check_chain(ns, versions, report)
+    n_shards: Optional[int] = None
+    try:
+        n_shards = read_shard_config(ns)
+    except Exception as e:
+        report.issues.append(FsckIssue(
+            "error", "corrupt-shard-config", ns.key("manifest", "shards.cfg"),
+            f"cannot decode: {type(e).__name__}: {e}"))
+    if n_shards is not None and n_shards > 1:
+        view = _check_sharded(ns, n_shards, report)
+        # downstream checks compare watermark / RunManifest cursor versions
+        # against the retained range; on a sharded run versions are the
+        # monotone merged scalar, for which any value up to the current head
+        # is restorable (load_view treats the version as a floor)
+        latest = view.version if view is not None else -1
+        versions = list(range(0, latest + 1, max(1, latest))) if latest >= 0 \
+            else []
+    else:
+        versions = _manifest_versions(ns)
+        view = _check_chain(ns, versions, report)
     _check_tgbs(ns, view, report)
     _check_derive(ns, view, report, parent_ns)
     _check_trim_skew(ns, view, versions, report)

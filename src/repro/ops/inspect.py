@@ -11,7 +11,8 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 from repro.core.lifecycle import read_trim_marker, read_watermarks
-from repro.core.manifest import MANIFEST_FORMAT_FLAT, ManifestStore
+from repro.core.manifest import (MANIFEST_FORMAT_FLAT, ManifestStore,
+                                 ShardedManifestStore, read_shard_config)
 from repro.core.objectstore import Namespace, NoSuchKey
 from repro.ops.fsck import _manifest_versions, list_streams
 
@@ -96,7 +97,55 @@ def inspect_run(ns: Namespace, recurse_streams: bool = True) -> Dict:
         "tgb_objects": len(store.list(ns.key("tgb"))),
     }
     view = None
-    if versions:
+    try:
+        n_shards = read_shard_config(ns)
+    except Exception:
+        n_shards = None
+    if n_shards is not None and n_shards > 1:
+        m = ShardedManifestStore(ns, n_shards)
+        latest = m.latest_version()
+        mv = m.load_view(latest) if latest >= 0 else None
+        shard_rows = []
+        for k, shard in enumerate(m.shards):
+            head = shard.latest_version(hint=-1)
+            sv = shard.load_view(head) if head >= 0 else None
+            shard_rows.append({
+                "shard": k,
+                "head_version": head,
+                "base_step": sv.base_step if sv is not None else 0,
+                "live_entries": len(sv.tgbs) if sv is not None else 0,
+                "producers": sorted(sv.producers) if sv is not None else [],
+            })
+        seg_seqs = m.segments.seqs()
+        out["manifests"]["sharded"] = {
+            "n_shards": n_shards,
+            "merged_version": latest,
+            "frontier": mv.frontier if mv is not None else -1,
+            "shards": shard_rows,
+            "segments": {
+                "retained": len(seg_seqs),
+                "oldest": seg_seqs[0] if seg_seqs else None,
+                "latest": seg_seqs[-1] if seg_seqs else None,
+                "folded_steps": (m.segments.read(seg_seqs[-1]).end_step
+                                 if seg_seqs else 0),
+            },
+        }
+        if mv is not None:
+            view = mv
+            out["view"] = {
+                "version": mv.version,
+                "base_step": mv.base_step,
+                "total_steps": mv.total_steps,
+                "live_tgbs": len(mv.tgbs),
+                "live_bytes": sum(t.size_bytes for t in mv.tgbs),
+            }
+            out["producers"] = {
+                pid: {"committed_offset": st.committed_offset,
+                      "last_commit_version": st.last_commit_version,
+                      "epoch": st.epoch}
+                for pid, st in sorted(mv.producers.items())
+            }
+    elif versions:
         manifests = ManifestStore(ns)
         doc = manifests.read_doc(versions[-1])
         out["manifests"]["format"] = doc.get("format", MANIFEST_FORMAT_FLAT)

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-from repro.core.manifest import ManifestStore
+from repro.core.manifest import open_manifest_store
 from repro.core.objectstore import Namespace
 from repro.obs.recorder import component_dirs, read_snapshots
 
@@ -40,7 +40,7 @@ RATE_WINDOW = 8
 
 def _frontier(ns: Namespace) -> Optional[Dict[str, int]]:
     """The committed manifest frontier, or None before the first commit."""
-    m = ManifestStore(ns)
+    m = open_manifest_store(ns)
     v = m.latest_version()
     if v < 0:
         return None

@@ -14,7 +14,7 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.core.lifecycle import Reclaimer, Watermark, write_watermark
-from repro.core.manifest import DatasetView, ManifestStore
+from repro.core.manifest import DatasetView, ManifestStore, open_manifest_store
 from repro.core.objectstore import Namespace
 
 __all__ = ["Stream"]
@@ -29,7 +29,9 @@ class Stream:
         self.weight = weight
         self.ns = parent_ns.stream(name)
         self.expected_ranks = expected_ranks
-        self._manifests = ManifestStore(self.ns)
+        # shard-layout discovery: a sharded stream transparently yields the
+        # merged read view; legacy streams get the plain single-chain store
+        self._manifests = open_manifest_store(self.ns)
         self._view = DatasetView()
         self._reclaimer: Optional[Reclaimer] = None
 

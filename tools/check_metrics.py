@@ -26,6 +26,8 @@ from pathlib import Path
 STATS_MODULES = [
     "repro.core.producer",
     "repro.core.consumer",
+    "repro.core.commit",
+    "repro.core.compactor",
     "repro.core.lifecycle",
     "repro.core.resilience",
     "repro.run.session",
