@@ -309,6 +309,7 @@ class ShardedCommitProtocol:
                    trim_to_step: Optional[int] = None
                    ) -> Tuple[CommitResult, List[TGBDescriptor]]:
         del trim_to_step  # sharded trim is compactor-owned
+        t0 = self.clock.now()
         before = len(pending)
         pending = [t for t in pending if t.producer_seq > self._merged_offset]
         self.stats.merged_dedups += before - len(pending)
@@ -319,9 +320,14 @@ class ShardedCommitProtocol:
                 self._pad_for_order(sub, shard)
             except TransientStoreError:
                 # couldn't establish ordering; surface as a conflict so the
-                # caller retries (the pad resumes on the next attempt)
+                # caller retries (the pad resumes on the next attempt).
+                # tau_obs is the real elapsed attempt time, never 0.0: an
+                # EMA fed zeros here would SHRINK the DAC gap exactly when
+                # the destination chain is unhealthy — the opposite of
+                # backing off.
                 self.stats.conflicts += 1
-                return (CommitResult(False, sub.view.version, 0.0,
+                return (CommitResult(False, sub.view.version,
+                                     self.clock.now() - t0,
                                      sub.n_active()), pending)
         result, still = sub.try_commit(pending)
         self.chooser.observe(result.success)
@@ -375,16 +381,26 @@ class ShardedCommitProtocol:
             return
         loads = [self._shard_load(k) for k in range(self.manifests.n_shards)]
         new = self.chooser.choose(loads)
-        if new != self.chooser.shard:
-            self.chooser.move_to(new)
-            # the old home shard may still be absorbing an ambiguous put of
-            # ours: re-derive the cross-shard committed offset before any
-            # commit lands on the new home
-            self._merged_offset = max(
-                self._merged_offset,
-                self.manifests.merged_producer_offset(self.producer_id))
-            self.stats.switches += 1
-            self.stats.shard_id = float(new)
+        if new == self.chooser.shard:
+            return
+        # the old home shard may still be absorbing an ambiguous put of
+        # ours: re-derive the cross-shard committed offset BEFORE homing on
+        # the new shard — moving first would leave a window where a commit
+        # lands on the new home with a stale dedup floor and re-appends
+        # TGBs the old shard already absorbed. If the sweep keeps failing,
+        # stay put: the next conflict re-probes and retries the move.
+        try:
+            merged = retry_transient(
+                lambda: self.manifests.merged_producer_offset(
+                    self.producer_id),
+                self.clock, attempts=CommitProtocol.READ_RETRIES,
+                retry_on=(TransientStoreError, NoSuchKey))
+        except (TransientStoreError, NoSuchKey):
+            return
+        self._merged_offset = max(self._merged_offset, merged)
+        self.chooser.move_to(new)
+        self.stats.switches += 1
+        self.stats.shard_id = float(new)
 
     def _pad_for_order(self, sub: CommitProtocol, shard: int) -> None:
         """Make the next candidate key sort after our newest committed entry.

@@ -117,7 +117,8 @@ class Reclaimer:
                  manifests: Optional[ManifestStore] = None,
                  watermark_source: Optional[
                      Callable[[], Optional[Watermark]]] = None,
-                 obs_keep_snaps: int = 8):
+                 obs_keep_snaps: int = 8,
+                 shard_runway_windows: int = 4):
         self.ns = ns
         self.store = ns.store
         self.expected_ranks = expected_ranks
@@ -127,6 +128,14 @@ class Reclaimer:
         # merged view and per-shard chain GC, a legacy run is unchanged
         self.manifests = manifests if manifests is not None \
             else open_manifest_store(ns)
+        # shard-chain GC runway, in snapshot windows behind each chain head.
+        # Shard trimming is NOT gated on consumer watermarks (per-shard
+        # versions are not derivable from the merged watermark scalar), so
+        # the runway is what keeps warm readers' probe hints valid: a reader
+        # stale past it re-syncs via latest_version's GC-hole LIST fallback
+        # rather than decoding incrementally — pick the window count by how
+        # long readers may realistically pause versus per-shard commit rate
+        self.shard_runway_windows = max(1, shard_runway_windows)
         # telemetry retention rides the data lifecycle: each cycle keeps the
         # newest N flight-recorder snapshots per component (0 = keep all)
         self.obs_keep_snaps = obs_keep_snaps
@@ -231,14 +240,20 @@ class Reclaimer:
 
     def _reclaim_sharded_manifests(self, safe_step: int) -> None:
         """Sharded-run GC: trim each shard chain back to the newest snapshot
-        at least one snapshot window behind its head (stale warm readers keep
-        an incremental-decode runway), and drop compacted segments wholly
-        below the safe step — except the newest segment, whose cumulative
-        fold counts are the compactor's crash-recovery bookkeeping."""
+        at least ``shard_runway_windows`` snapshot windows behind its head
+        (stale warm readers keep an incremental-decode runway), and drop
+        compacted segments wholly below the safe step — except the newest
+        segment, whose cumulative fold counts are the compactor's
+        crash-recovery bookkeeping.
+
+        A reader that pauses longer than the runway is still safe: its next
+        ``latest_version(hint)`` probe lands in the GC hole, detects the
+        missing hint, and re-syncs via LIST + snapshot decode instead of
+        concluding the chain is idle."""
         m = self.manifests
         for shard in m.shards:
             head = shard.latest_version(hint=-1)
-            horizon = head - shard.snapshot_every
+            horizon = head - self.shard_runway_windows * shard.snapshot_every
             if horizon <= 0:
                 continue
             keep_from = None

@@ -311,15 +311,30 @@ class ManifestStore:
         Versions are dense while retained, so the first miss bounds the
         frontier; a concurrent commit landing mid-search is picked up by the
         next poll, exactly as with the old linear probe. Falls back to LIST
-        when cold (hint < 0)."""
+        when cold (hint < 0).
+
+        A miss on ``hint + 1`` is ambiguous: either the chain head really is
+        ``hint``, or GC trimmed the chain past the hint while this reader was
+        stale (retention deletes a dense prefix, so ``hint`` and ``hint + 1``
+        vanish together). The head probe re-checks ``hint`` itself and falls
+        back to LIST when it is gone — without this, a reader parked in a GC
+        hole would conclude the chain is idle and stall at ``hint`` forever."""
         if hint < 0:
             self.last_probe_count = 0
             versions = self.list_versions()
             return versions[-1] if versions else -1
         probes = 1
         if not self.version_exists(hint + 1):
+            probes += 1
+            if self.version_exists(hint):
+                self.last_probe_count = probes
+                return hint
+            # GC hole: the hint was reclaimed out from under us — re-sync.
+            # GC never deletes the chain head, so a LIST result below the
+            # hint can only be staleness: clamp instead of regressing.
             self.last_probe_count = probes
-            return hint
+            versions = self.list_versions()
+            return max(hint, versions[-1]) if versions else hint
         lo, span = hint + 1, 1  # invariant: lo exists
         while True:
             cand = lo + span
@@ -547,9 +562,30 @@ def write_shard_config(ns: Namespace, n_shards: int,
     client that discovers the layout encodes consistently. The default is
     DELTA: sharding exists to scale the commit rate, and flat re-encoding
     of the whole entry list per commit would put an O(history) CPU+bytes
-    term right back on that path."""
+    term right back on that path.
+
+    Refuses to claim a layout over a run that already has committed legacy
+    single-chain manifests: sharded readers only look at ``manifest/shard-*``
+    and compact segments, so the claim would make the entire existing
+    history invisible — consumers would see an empty dataset and producers
+    would recover offset -1 and re-commit from scratch. Shard count is a
+    run-creation decision; migrating an existing run is a separate
+    (offline) operation."""
     if n_shards < 2:
         raise ValueError(f"sharded layout needs n_shards >= 2, got {n_shards}")
+    # already claimed: adopt (first writer won; also skips the legacy LIST
+    # on the common every-session-passes-manifest_shards path)
+    existing = read_shard_config(ns)
+    if existing is not None:
+        return existing
+    legacy = ManifestStore(ns).list_versions()
+    if legacy:
+        raise ValueError(
+            f"run {ns.prefix} already has {len(legacy)} committed "
+            f"single-chain manifest version(s) (head "
+            f"{legacy[-1]}): claiming a sharded layout would hide that "
+            f"history from every sharded reader. Create sharded runs "
+            f"under a fresh namespace.")
     raw = msgpack.packb({"schema": SHARDS_CFG_SCHEMA, "n_shards": n_shards,
                          "fmt": fmt}, use_bin_type=True)
     if ns.store.put_if_absent(shards_cfg_key(ns), raw):
@@ -829,18 +865,35 @@ class ShardedManifestStore:
         mv.merged_counts = list(mv.folds)
 
     def _apply_new_segments_locked(self, mv: MergedDatasetView) -> None:
-        seq = mv.seg_seq
-        while self.store.exists(self.segments.seg_key(seq + 1)):
-            seq += 1
-            seg = self.segments.read(seq)
+        """Fold segments newer than ``mv.seg_seq`` into the merged view.
+
+        Driven by the segment LIST rather than ``exists(seq + 1)`` probing:
+        the reclaimer deletes cold segments (everything wholly below the
+        consumer watermark except the newest), so a warm view that lags the
+        fold horizon finds a HOLE after its last applied seq. That hole is
+        trimmed history, not corruption — every step it covered is below the
+        global watermark and its TGB objects are already deleted. The view
+        restarts its merged prefix at the first retained segment boundary;
+        a reader still asking for the dropped steps gets the legacy trim
+        semantics (``StepUnavailable`` via ``base_step``) instead of a false
+        'compaction orphan' crash."""
+        for seq in self.segments.seqs():
+            if seq <= mv.seg_seq:
+                continue
+            try:
+                seg = self.segments.read(seq)
+            except NoSuchKey:
+                continue  # reclaimed between LIST and GET; successors cover it
             merged_end = mv.base_step + len(mv.tgbs)
-            if seg.end_step > merged_end:
+            if seg.base_step > merged_end:
+                # retention gap: steps [merged_end, seg.base_step) were
+                # folded and reclaimed past this view — resync at the
+                # boundary (entries we held are all below the watermark)
+                mv.base_step = seg.base_step
+                mv.tgbs = list(seg.tgbs)
+                mv.entry_shards = [-1] * len(seg.tgbs)
+            elif seg.end_step > merged_end:
                 skip = merged_end - seg.base_step
-                if skip < 0:
-                    raise RuntimeError(
-                        f"segment {seq} of {self.ns.prefix} starts at step "
-                        f"{seg.base_step} beyond merged end {merged_end} "
-                        f"(missing predecessor segment; run fsck)")
                 mv.tgbs.extend(seg.tgbs[skip:])
                 mv.entry_shards.extend([-1] * (len(seg.tgbs) - skip))
             mv.folds = list(seg.folds)

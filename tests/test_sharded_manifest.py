@@ -12,14 +12,17 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core.clock import VirtualClock
 from repro.core.commit import CommitProtocol, ShardedCommitProtocol
 from repro.core.compactor import Compactor
+from repro.core.errors import TransientStoreError
 from repro.core.lifecycle import Reclaimer, Watermark
 from repro.core.manifest import (DatasetView, ManifestStore,
                                  MANIFEST_FORMAT_DELTA, MANIFEST_FORMAT_FLAT,
-                                 ShardedManifestStore, decode_manifest,
-                                 encode_flat_manifest, open_manifest_store,
-                                 read_shard_config, write_shard_config)
+                                 ShardedManifestStore, StepUnavailable,
+                                 decode_manifest, encode_flat_manifest,
+                                 open_manifest_store, read_shard_config,
+                                 write_shard_config)
 from repro.core.objectstore import MemoryObjectStore, Namespace, ZERO_LATENCY
 from repro.core.tgb import TGBDescriptor
 from repro.ops.fsck import fsck
@@ -89,15 +92,43 @@ class TestGallopingDiscovery:
         assert ms.latest_version(hint=-1) == 300
         assert ms.last_probe_count == 0
 
-    def test_at_head_is_one_probe(self):
+    def test_at_head_is_two_probes(self):
+        # one GET for head+1 (miss) plus one confirming the hint still
+        # exists — the confirm is what lets a GC-stranded reader re-sync
+        # instead of stalling at a deleted hint forever
         ms = self._chain(300)
         assert ms.latest_version(hint=300) == 300
-        assert ms.last_probe_count == 1
+        assert ms.last_probe_count == 2
 
     def test_small_gap_is_cheap(self):
         ms = self._chain(300)
         assert ms.latest_version(hint=299) == 300
         assert ms.last_probe_count <= 3
+
+    def test_gc_hole_resyncs_via_list(self):
+        # retention deleted a dense prefix out from under a stale reader:
+        # hint+1 AND hint are both gone. The old probe returned the hint
+        # (reading the hole as the chain head) and the reader stalled
+        # forever; now it falls back to LIST and finds the true head.
+        ns = _ns()
+        ms = ManifestStore(ns)
+        for v in range(301):
+            assert ms.try_put_version(v, b"x")
+        for v in range(250):  # GC: dense prefix trim
+            ns.store.delete(ms.manifest_key(v))
+        stale = ManifestStore(ns)
+        assert stale.latest_version(hint=100) == 300
+
+    def test_stale_list_never_regresses_below_hint(self):
+        # a reader that has LOADED version v can never see the chain report
+        # a head below v, even if the backing LIST is stale/empty
+        ns = _ns()
+        ms = ManifestStore(ns)
+        for v in range(4):
+            assert ms.try_put_version(v, b"x")
+        for v in range(4):  # simulate a fully stale LIST window
+            ns.store.delete(ms.manifest_key(v))
+        assert ManifestStore(ns).latest_version(hint=3) == 3
 
     def test_large_gap_is_logarithmic(self):
         head = 1000
@@ -154,6 +185,23 @@ class TestLayoutResolution:
         assert ms.format == MANIFEST_FORMAT_DELTA
         # discovery (no fmt argument) resolves to the recorded encoding
         assert open_manifest_store(ns).format == MANIFEST_FORMAT_DELTA
+
+    def test_claim_refused_on_run_with_legacy_history(self):
+        # claiming a shard layout over a run with committed single-chain
+        # manifests would make the whole history invisible to sharded
+        # readers (empty dataset, producers re-commit from offset -1) —
+        # refuse loudly instead
+        ns = _ns()
+        proto = CommitProtocol(open_manifest_store(ns), "p0")
+        _commit(proto, [_tgb("p0", 0)])
+        with pytest.raises(ValueError, match="single-chain manifest"):
+            write_shard_config(ns, 4)
+        with pytest.raises(ValueError, match="single-chain manifest"):
+            open_manifest_store(ns, shards=4)
+        # the run stays readable as the legacy layout it is
+        m = open_manifest_store(ns)
+        assert isinstance(m, ManifestStore)
+        assert m.load_view(m.latest_version()).total_steps == 1
 
     def test_k1_claim_yields_plain_store(self):
         ns = _ns()
@@ -291,6 +339,106 @@ class TestCompactor:
         assert _ids(cold2.load_view(cold2.latest_version())) == ids
         assert _ids(reader.load_view(reader.latest_version())) == ids
 
+    def test_warm_reader_survives_segment_reclaim_gap(self):
+        # a warm merged view that lags the fold horizon and then finds its
+        # next segment RECLAIMED must treat the hole as trimmed history
+        # (StepUnavailable below the retained boundary), not crash with a
+        # false 'compaction orphan' — the legacy single-chain degradation
+        ns = _ns()
+        open_manifest_store(ns, shards=2)
+        protos = {p: ShardedCommitProtocol(open_manifest_store(ns), p)
+                  for p in ("p0", "p1")}
+        protos["p0"].chooser.move_to(0)
+        protos["p1"].chooser.move_to(1)
+        seqs = {p: 0 for p in protos}
+
+        def push(n):
+            for _ in range(n):
+                for p in sorted(protos):
+                    _commit(protos[p], [_tgb(p, seqs[p])])
+                    seqs[p] += 1
+            _quiesce(protos)
+
+        push(4)  # 8 steps merged live by the warm reader, then it pauses
+        warm = open_manifest_store(ns)
+        assert warm.load_view(warm.latest_version()).total_steps == 8
+        comp = Compactor(ns, open_manifest_store(ns), min_fold=1)
+        push(4)
+        comp.run_cycle(safe_step=12)   # segment 0 (covers the warm prefix)
+        push(4)
+        comp.run_cycle(safe_step=20)   # segment 1
+        m = open_manifest_store(ns)
+        segs = m.segments.seqs()
+        assert len(segs) >= 2
+        boundary = m.segments.read(segs[-1]).base_step
+        assert boundary > 8  # the retained fold really starts past the pause
+        for s in segs[:-1]:  # reclaim everything but the newest segment
+            ns.store.delete(m.segments.seg_key(s))
+        view = warm.load_view(warm.latest_version())  # must not raise
+        assert view.base_step == boundary
+        assert view.total_steps == sum(seqs.values())
+        with pytest.raises(StepUnavailable):
+            view.tgb_at_step(boundary - 1)
+        cold = open_manifest_store(ns)
+        assert _ids(cold.load_view(cold.latest_version())) == _ids(view)
+
+
+# ---------------------------------------------------------------------------
+# shard switching: dedup-floor ordering, pad-failure tau accounting
+# ---------------------------------------------------------------------------
+
+class TestShardSwitchSafety:
+    def _proto(self, n_shards=2):
+        ns = Namespace(
+            MemoryObjectStore(latency=ZERO_LATENCY, clock=VirtualClock()),
+            "runs/shardtest")
+        open_manifest_store(ns, shards=n_shards)
+        return ns, ShardedCommitProtocol(open_manifest_store(ns), "p0")
+
+    def test_switch_aborted_when_offset_sweep_fails(self):
+        # the cross-shard committed-offset re-derivation must succeed BEFORE
+        # the chooser re-homes: moving first would open a window where a
+        # commit lands on the new shard with a stale dedup floor and
+        # re-appends TGBs the old shard already absorbed
+        ns, proto = self._proto()
+        _commit(proto, [_tgb("p0", 0)])
+        home = proto.chooser.shard
+        other = (home + 1) % 2
+        proto.chooser.should_probe = lambda: True
+        proto.chooser.choose = lambda loads: other
+
+        def boom(pid):
+            raise TransientStoreError("offset sweep down")
+
+        proto.manifests.merged_producer_offset = boom
+        proto._maybe_switch()
+        assert proto.chooser.shard == home  # stayed put: floor never derived
+        assert proto.stats.switches == 0
+        del proto.manifests.merged_producer_offset  # store recovers
+        proto._maybe_switch()
+        assert proto.chooser.shard == other
+        assert proto.stats.switches == 1
+        assert proto._merged_offset == 0  # floor derived before the move
+
+    def test_pad_failure_reports_elapsed_tau(self):
+        # a failed ordering pad is a signal the destination chain is
+        # unhealthy: tau_obs must be the real elapsed attempt time so DAC
+        # backs off — feeding 0.0 would shrink the gap instead
+        ns, proto = self._proto()
+        clock = proto.clock
+
+        def slow_pad(sub, shard):
+            clock.sleep(0.25)
+            raise TransientStoreError("chain not advancing")
+
+        proto._pad_for_order = slow_pad
+        proto._last_key = (5, (proto.chooser.shard + 1) % 2)
+        batch = [_tgb("p0", 0)]
+        res, still = proto.try_commit(list(batch))
+        assert not res.success
+        assert res.tau_obs >= 0.25
+        assert still == batch  # nothing committed; batch stays pending
+
 
 # ---------------------------------------------------------------------------
 # fsck: sharded audits
@@ -393,7 +541,8 @@ class TestShardedReclaim:
             _commit(protos["p1"], [_tgb("p1", i)])
         _quiesce(protos)
         rec = Reclaimer(
-            ns, watermark_source=lambda: Watermark(version=0, step=0))
+            ns, watermark_source=lambda: Watermark(version=0, step=0),
+            shard_runway_windows=1)
         rec.run_cycle()
         assert rec.stats.manifests_deleted > 0
         m = open_manifest_store(ns)
@@ -406,6 +555,55 @@ class TestShardedReclaim:
         view = m.load_view(m.latest_version())
         assert view.total_steps == 2 * per
         assert len(set(_ids(view))) == 2 * per
+
+    def test_default_runway_defers_trim(self):
+        # the default multi-window runway must NOT trim a chain whose head
+        # is only ~2 windows old — that runway is what keeps warm readers'
+        # probe hints valid across realistic consumer pauses
+        ns = _ns()
+        open_manifest_store(ns, shards=2)
+        protos = {p: ShardedCommitProtocol(open_manifest_store(ns), p)
+                  for p in ("p0", "p1")}
+        protos["p0"].chooser.move_to(0)
+        protos["p1"].chooser.move_to(1)
+        for i in range(130):
+            _commit(protos["p0"], [_tgb("p0", i)])
+            _commit(protos["p1"], [_tgb("p1", i)])
+        _quiesce(protos)
+        rec = Reclaimer(
+            ns, watermark_source=lambda: Watermark(version=0, step=0))
+        rec.run_cycle()
+        assert rec.stats.manifests_deleted == 0
+
+    def test_stale_warm_reader_resyncs_after_chain_gc(self):
+        # a warm reader whose cached per-shard probe hints fall into the GC
+        # hole must re-sync to the true heads (via the LIST fallback), not
+        # conclude the chains are idle and stall the merged frontier forever
+        ns = _ns()
+        open_manifest_store(ns, shards=2)
+        protos = {p: ShardedCommitProtocol(open_manifest_store(ns), p)
+                  for p in ("p0", "p1")}
+        protos["p0"].chooser.move_to(0)
+        protos["p1"].chooser.move_to(1)
+        warm = open_manifest_store(ns)
+        for i in range(4):
+            _commit(protos["p0"], [_tgb("p0", i)])
+            _commit(protos["p1"], [_tgb("p1", i)])
+        _quiesce(protos)
+        seen = warm.load_view(warm.latest_version()).total_steps
+        assert seen == 8  # warm reader caches per-shard hints, then pauses
+        for i in range(4, 130):
+            _commit(protos["p0"], [_tgb("p0", i)])
+            _commit(protos["p1"], [_tgb("p1", i)])
+        _quiesce(protos)
+        Reclaimer(ns, watermark_source=lambda: Watermark(version=0, step=0),
+                  shard_runway_windows=1).run_cycle()
+        m = open_manifest_store(ns)
+        # the GC hole must actually cover the warm reader's cached hints
+        assert all(s.list_versions()[0] > max(warm._probed) for s in m.shards)
+        view = warm.load_view(warm.latest_version())  # the reader wakes up
+        assert view.total_steps == 2 * 130
+        assert len(set(_ids(view))) == 2 * 130
 
 
 # ---------------------------------------------------------------------------
